@@ -1,0 +1,106 @@
+"""Beyond-paper optimizations (paper §VI futures + our additions), each
+benchmarked against the paper-faithful DELI configuration:
+
+  1. locality-aware partitioning — nodes prefer samples already in their
+     cache when the epoch re-partitions (kills the 66% epoch-2 miss floor);
+  2. streaming cache inserts — samples become visible as they arrive
+     instead of at fetch completion;
+  3. listing cache — one Class A listing per session (paper §VI idea);
+  4. super-samples — grouped objects divide Class B request count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import check, fmt_table, mean, trials, workloads
+from repro.core import (
+    GcpPrices,
+    PrefetchConfig,
+    SimConfig,
+    WorkloadCostInputs,
+    cost_bucket,
+    cost_with_listing_cache,
+    cost_with_supersamples,
+)
+
+PRICES = GcpPrices()
+CACHE = 2048
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    base_pf = PrefetchConfig.fifty_fifty(CACHE)
+    for spec in workloads(fast):
+        wl = spec.name.split("-x")[0]
+        base_cfg = SimConfig(source="bucket", cache_items=CACHE, prefetch=base_pf)
+
+        def stats(cfg):
+            ts = trials(spec, cfg, epochs=2, n=1 if fast else 3)
+            return (
+                mean(t["miss_e2"] for t in ts),
+                mean(t["wait_e1"] + t["wait_e2"] for t in ts),
+            )
+
+        miss_b, wait_b = stats(base_cfg)
+        rows.append([spec.name, "50/50 baseline", f"{miss_b:.3f}", f"{wait_b:.1f}s"])
+
+        # 1. locality-aware partitioning — attacks the paper's 66% epoch-2
+        # miss floor (Fig. 5), which exists because the random re-partition
+        # hands 2/3 of a node's cached samples to other nodes.  Measured in
+        # the cache-only regime where that floor lives (under pre-fetching
+        # the miss rate is already ~1%, so there is nothing to cut).
+        cache_only = SimConfig(source="bucket", cache_items=-1)
+        miss_r, _ = stats(cache_only)
+        miss_l, _ = stats(dataclasses.replace(cache_only, locality_aware=True))
+        rows.append([spec.name, "cache-only random part.", f"{miss_r:.3f}", ""])
+        rows.append([spec.name, "cache-only +locality", f"{miss_l:.3f}", ""])
+        checks.append(
+            check(
+                f"beyond/{wl}/locality-breaks-66pct-floor",
+                miss_l < miss_r - 0.3,
+                f"epoch-2 miss {miss_r:.1%} -> {miss_l:.1%} (floor ~66% -> ~0)",
+            )
+        )
+
+        # 2. streaming inserts
+        miss_s, wait_s = stats(dataclasses.replace(base_cfg, streaming_insert=True))
+        rows.append([spec.name, "+streaming-insert", f"{miss_s:.3f}", f"{wait_s:.1f}s"])
+        checks.append(
+            check(
+                f"beyond/{wl}/streaming-no-worse",
+                wait_s <= wait_b * 1.05,
+                f"wait {wait_b:.1f}s -> {wait_s:.1f}s",
+            )
+        )
+
+        # 3+4. cost-side optimizations (paper §VI)
+        inp = WorkloadCostInputs(
+            n_nodes=spec.n_nodes, os_disk_gb=16.0, dataset_gb=spec.dataset_gb,
+            n_samples=spec.n_samples, epochs=2,
+            compute_seconds=2 * spec.compute_per_epoch_s,
+            data_wait_seconds=wait_b, cached_samples=CACHE, fetch_size=1024,
+        )
+        api_base = cost_bucket(PRICES, inp, with_prefetch=True)["api"]
+        api_lc = cost_with_listing_cache(PRICES, inp)["api"]
+        api_ss = cost_with_supersamples(PRICES, inp, group_size=32)["api"]
+        rows.append([spec.name, "api: per-fetch listing", f"${api_base:.3f}", ""])
+        rows.append([spec.name, "api: +listing-cache", f"${api_lc:.3f}", ""])
+        rows.append([spec.name, "api: +supersamples(32)", f"${api_ss:.3f}", ""])
+        checks += [
+            check(
+                f"beyond/{wl}/listing-cache-cheaper",
+                api_lc < api_base,
+                f"${api_base:.3f} -> ${api_lc:.3f}",
+            ),
+            check(
+                f"beyond/{wl}/supersamples-cheaper",
+                api_ss < api_base,
+                f"${api_base:.3f} -> ${api_ss:.3f}",
+            ),
+        ]
+    return {
+        "name": "Beyond-paper — locality, streaming, listing cache, super-samples",
+        "table": fmt_table(["workload", "variant", "miss-ep2 / api$", "wait"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

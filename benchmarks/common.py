@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: run simulator conditions, format tables,
+collect checks.  Every benchmark module exposes ``run(fast=False) -> dict``
+with keys {"name", "rows", "checks", "notes"}; checks are (label, ok, detail).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import (
+    CIFAR10,
+    MNIST,
+    PrefetchConfig,
+    SimConfig,
+    mean_data_wait,
+    mean_miss_rate,
+    simulate_cluster,
+)
+from repro.core.workloads import WorkloadSpec
+
+FAST_FACTOR = 0.1  # --fast: 10% datasets, ratios preserved
+
+
+def workloads(fast: bool) -> List[WorkloadSpec]:
+    if fast:
+        return [MNIST.scaled(FAST_FACTOR), CIFAR10.scaled(FAST_FACTOR)]
+    return [MNIST, CIFAR10]
+
+
+def run_condition(
+    spec: WorkloadSpec, cfg: SimConfig, epochs: int = 2, seed: int = 0
+) -> Dict:
+    stats, store = simulate_cluster(spec, cfg, epochs=epochs, seed=seed)
+    return {
+        "workload": spec.name,
+        "condition": cfg.label(),
+        "miss_e1": mean_miss_rate(stats, 0),
+        "miss_e2": mean_miss_rate(stats, 1) if epochs > 1 else None,
+        "wait_e1": mean_data_wait(stats, 0),
+        "wait_e2": mean_data_wait(stats, 1) if epochs > 1 else None,
+        "store": store,
+        "stats": stats,
+    }
+
+
+def trials(
+    spec: WorkloadSpec, cfg: SimConfig, epochs: int = 2, n: int = 3
+) -> List[Dict]:
+    """The paper averages over three trials; seeds give us the trials."""
+    return [run_condition(spec, cfg, epochs, seed=s) for s in range(n)]
+
+
+def mean(xs) -> float:
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def check(label: str, ok: bool, detail: str) -> Tuple[str, bool, str]:
+    return (label, bool(ok), detail)
+
+
+def fmt_table(headers: List[str], rows: List[List]) -> str:
+    widths = [
+        max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+        for i, h in enumerate(headers)
+    ]
+    out = ["  ".join(str(h).ljust(w) for h, w in zip(headers, widths))]
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

@@ -1,0 +1,64 @@
+"""Fig. 3: data loading time by method (disk / GCP-direct / cache-only /
+DELI 50-50).  Headline claims validated:
+
+  * bucket-direct loading is 8-16x disk;
+  * DELI 50/50 cuts data-wait 85.6% (MNIST) / 93.5% (CIFAR-10) vs direct;
+  * 50/50 lands near (or below) the disk baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import check, fmt_table, mean, trials, workloads
+from repro.core import PrefetchConfig, SimConfig
+
+PAPER_REDUCTION = {"mnist-cnn": 0.856, "cifar10-resnet50": 0.935}
+CACHE = 2048
+
+
+def conditions():
+    return [
+        SimConfig(source="disk"),
+        SimConfig(source="bucket", cache_items=None),
+        SimConfig(source="bucket", cache_items=-1),
+        SimConfig(source="bucket", cache_items=CACHE,
+                  prefetch=PrefetchConfig.fifty_fifty(CACHE)),
+    ]
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    for spec in workloads(fast):
+        waits = {}
+        for cfg in conditions():
+            ts = trials(spec, cfg, epochs=2, n=1 if fast else 3)
+            w = mean(mean((t["wait_e1"], t["wait_e2"])) for t in ts)
+            waits[cfg.label()] = w
+            rows.append([spec.name, cfg.label(), f"{w:.1f}s"])
+        disk, direct = waits["disk"], waits["gcp-direct"]
+        deli = waits[f"cache[{CACHE}]+pf(f={CACHE//2},T={CACHE//2})"]
+        penalty = direct / disk
+        reduction = 1 - deli / direct
+        key = spec.name.split("-x")[0]
+        expect = PAPER_REDUCTION[key]
+        checks += [
+            check(
+                f"fig3/{key}/bucket-penalty-8-16x",
+                6 <= penalty <= 20,
+                f"direct/disk = {penalty:.1f}x (paper: 8-16x)",
+            ),
+            check(
+                f"fig3/{key}/deli-reduction",
+                reduction >= expect - 0.08,
+                f"50/50 cuts wait {reduction:.1%} vs direct (paper: {expect:.1%})",
+            ),
+            check(
+                f"fig3/{key}/near-disk",
+                deli <= 2.5 * disk,
+                f"50/50 {deli:.1f}s vs disk {disk:.1f}s",
+            ),
+        ]
+    return {
+        "name": "Fig. 3 — data loading time by method",
+        "table": fmt_table(["workload", "condition", "wait (mean ep1/ep2)"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

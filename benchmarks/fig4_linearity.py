@@ -1,0 +1,44 @@
+"""Fig. 4: data loading time is linear in miss rate (both workloads).
+Collects (miss, wait) from the caching+pre-fetching trials across
+configurations and fits a line; validates R^2."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import check, fmt_table, run_condition, workloads
+from repro.core import PrefetchConfig, SimConfig
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    for spec in workloads(fast):
+        pts = []
+        for fetch in (256, 512, 1024, 2048, 4096):
+            for cache_mult in (1, 2):
+                cache = fetch * cache_mult
+                cfg = SimConfig(
+                    source="bucket", cache_items=cache,
+                    prefetch=PrefetchConfig(fetch_size=fetch,
+                                            prefetch_threshold=cache // 2,
+                                            cache_items=cache),
+                )
+                for seed in range(1 if fast else 2):
+                    r = run_condition(spec, cfg, epochs=2, seed=seed)
+                    for e in ("1", "2"):
+                        pts.append((r[f"miss_e{e}"], r[f"wait_e{e}"]))
+        x = np.array([p[0] for p in pts])
+        y = np.array([p[1] for p in pts])
+        A = np.vstack([x, np.ones_like(x)]).T
+        coef, res, *_ = np.linalg.lstsq(A, y, rcond=None)
+        ss_tot = float(((y - y.mean()) ** 2).sum())
+        r2 = 1.0 - float(res[0]) / ss_tot if len(res) and ss_tot else 1.0
+        rows.append([spec.name, len(pts), f"{coef[0]:.1f}", f"{coef[1]:.2f}", f"{r2:.4f}"])
+        checks.append(
+            check(f"fig4/{spec.name}/linear", r2 > 0.98, f"R^2 = {r2:.4f} over {len(pts)} points")
+        )
+    return {
+        "name": "Fig. 4 — wait time ~ linear in miss rate",
+        "table": fmt_table(["workload", "points", "slope s/miss", "intercept", "R^2"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

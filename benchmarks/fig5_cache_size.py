@@ -1,0 +1,49 @@
+"""Fig. 5: cache size vs miss rate, NO pre-fetching.  Validates:
+
+  * unlimited cache epoch-2 miss ~= 66% (random 3-way re-partitioning:
+    only 1/3 of a node's epoch-1 partition returns to it);
+  * miss climbs rapidly as the cache shrinks (~90% at 75% of partition).
+"""
+from __future__ import annotations
+
+from benchmarks.common import check, fmt_table, mean, trials, workloads
+from repro.core import SimConfig
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    for spec in workloads(fast):
+        part = spec.partition_size
+        miss2 = {}
+        for frac, cache in [("unlimited", -1)] + [
+            (f"{int(f*100)}%", int(part * f)) for f in (0.75, 0.5, 0.25)
+        ]:
+            cfg = SimConfig(source="bucket", cache_items=cache)
+            ts = trials(spec, cfg, epochs=2, n=1 if fast else 3)
+            m1 = mean(t["miss_e1"] for t in ts)
+            m2 = mean(t["miss_e2"] for t in ts)
+            miss2[frac] = m2
+            rows.append([spec.name, frac, f"{m1:.3f}", f"{m2:.3f}"])
+        checks += [
+            check(
+                f"fig5/{spec.name}/unlimited-66pct",
+                0.60 <= miss2["unlimited"] <= 0.72,
+                f"epoch-2 miss {miss2['unlimited']:.1%} (paper ~66%)",
+            ),
+            check(
+                f"fig5/{spec.name}/75pct-cache-90pct-miss",
+                miss2["75%"] >= 0.85,
+                f"epoch-2 miss at 75% cache {miss2['75%']:.1%} (paper ~90%)",
+            ),
+            check(
+                f"fig5/{spec.name}/monotone",
+                miss2["25%"] >= miss2["50%"] >= miss2["75%"] >= miss2["unlimited"],
+                "miss rises as cache shrinks",
+            ),
+        ]
+    return {
+        "name": "Fig. 5 — cache size vs miss rate (caching alone)",
+        "table": fmt_table(["workload", "cache", "miss ep1", "miss ep2"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

@@ -1,0 +1,43 @@
+"""Fig. 7: with fetch size fixed at 1024, growing the cache past 1x the
+fetch size buys (almost) nothing; below 1x the miss rate spikes."""
+from __future__ import annotations
+
+from benchmarks.common import check, fmt_table, mean, trials, workloads
+from repro.core import PrefetchConfig, SimConfig
+
+FETCH = 1024
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    for spec in workloads(fast):
+        series = {}
+        for mult in (0.5, 1.0, 2.0, 3.0):
+            cache = int(FETCH * mult)
+            cfg = SimConfig(
+                source="bucket", cache_items=cache,
+                prefetch=PrefetchConfig(fetch_size=FETCH, prefetch_threshold=0,
+                                        cache_items=cache),
+            )
+            ts = trials(spec, cfg, epochs=2, n=1 if fast else 3)
+            m = mean(mean((t["miss_e1"], t["miss_e2"])) for t in ts)
+            series[mult] = m
+            rows.append([spec.name, f"{mult:g}x", f"{m:.3f}"])
+        checks += [
+            check(
+                f"fig7/{spec.name}/under-1x-hurts",
+                series[0.5] > series[1.0] + 0.05,
+                f"0.5x miss {series[0.5]:.2f} vs 1x {series[1.0]:.2f}",
+            ),
+            check(
+                f"fig7/{spec.name}/flat-past-1x",
+                abs(series[3.0] - series[1.0]) < 0.05,
+                f"1x {series[1.0]:.3f} vs 3x {series[3.0]:.3f} (negligible)",
+            ),
+        ]
+    return {
+        "name": "Fig. 7 — cache size at constant fetch size (1024)",
+        "table": fmt_table(["workload", "cache/fetch", "miss (mean ep1/2)"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

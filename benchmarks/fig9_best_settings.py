@@ -1,0 +1,49 @@
+"""Fig. 9: Full-Fetch (fetch=cache, T=0; sizes 1024/2048) vs the 50/50
+approach (fetch=T=1024, cache=2048).  Validates: 50/50 >= Full-Fetch, with
+the large win on the compute-heavy workload (paper: 83% CIFAR miss drop
+vs Full-Fetch-1024)."""
+from __future__ import annotations
+
+from benchmarks.common import check, fmt_table, mean, trials, workloads
+from repro.core import PrefetchConfig, SimConfig
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    conds = {
+        "full-fetch-1024": PrefetchConfig.full_fetch(1024),
+        "full-fetch-2048": PrefetchConfig.full_fetch(2048),
+        "fifty-fifty-2048": PrefetchConfig.fifty_fifty(2048),
+    }
+    for spec in workloads(fast):
+        miss = {}
+        for label, pf in conds.items():
+            cfg = SimConfig(source="bucket", cache_items=pf.cache_items, prefetch=pf)
+            ts = trials(spec, cfg, epochs=2, n=1 if fast else 3)
+            miss[label] = mean(mean((t["miss_e1"], t["miss_e2"])) for t in ts)
+            rows.append([spec.name, label, f"{miss[label]:.3f}"])
+        wl = spec.name.split("-x")[0]
+        drop = 1 - miss["fifty-fifty-2048"] / miss["full-fetch-1024"] \
+            if miss["full-fetch-1024"] else 0.0
+        checks.append(
+            check(
+                f"fig9/{wl}/fifty-fifty-wins",
+                miss["fifty-fifty-2048"] <= miss["full-fetch-1024"] + 0.02,
+                f"50/50 {miss['fifty-fifty-2048']:.3f} vs full-fetch-1024 "
+                f"{miss['full-fetch-1024']:.3f} (drop {drop:.0%})",
+            )
+        )
+        if wl == "cifar10-resnet50":
+            checks.append(
+                check(
+                    "fig9/cifar/large-win",
+                    drop >= 0.5,
+                    f"50/50 cuts CIFAR miss {drop:.0%} vs Full-Fetch-1024 (paper 83%)",
+                )
+            )
+    return {
+        "name": "Fig. 9 — Full-Fetch vs 50/50",
+        "table": fmt_table(["workload", "condition", "miss (mean ep1/2)"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

@@ -1,0 +1,58 @@
+"""Roofline report: renders the dry-run sweep (results/dryrun/*.json) as
+the EXPERIMENTS.md §Roofline table and sanity-checks coverage (every
+applicable (arch x shape) cell present on both meshes, all ok)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import check, fmt_table
+from repro import configs
+from repro.models.config import applicable_shapes
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def expected_cells():
+    out = []
+    for arch in configs.ARCH_IDS:
+        for s in applicable_shapes(configs.get(arch)):
+            for mesh in ("pod16x16", "pod2x16x16"):
+                out.append((arch, s.name, mesh))
+    return out
+
+
+def run(fast: bool = False) -> dict:
+    rows, checks = [], []
+    found = {}
+    for f in sorted(RESULTS.glob("*.json")) if RESULTS.exists() else []:
+        d = json.loads(f.read_text())
+        found[(d["arch"], d["shape"], d["mesh"])] = d
+    missing = [c for c in expected_cells() if c not in found]
+    failed = [k for k, d in found.items() if d["status"] != "ok"]
+    checks.append(
+        check(
+            "dryrun/coverage",
+            not missing and not failed,
+            f"{len(found)} cells; missing={len(missing)} failed={len(failed)}",
+        )
+    )
+    for (arch, shape, mesh), d in sorted(found.items()):
+        if d["status"] != "ok":
+            rows.append([arch, shape, mesh, "FAIL", "", "", "", "", ""])
+            continue
+        r = d["roofline"]
+        rows.append([
+            arch, shape, mesh,
+            f"{r['compute_s']:.3f}", f"{r['memory_s']:.3f}", f"{r['collective_s']:.3f}",
+            r["dominant"], f"{r['useful_ratio']:.2f}", f"{r['roofline_fraction']*100:.1f}%",
+        ])
+    return {
+        "name": "Roofline — dry-run terms per (arch x shape x mesh)",
+        "table": fmt_table(
+            ["arch", "shape", "mesh", "comp_s", "mem_s", "coll_s", "dominant", "useful", "roof%"],
+            rows,
+        ),
+        "rows": rows,
+        "checks": checks,
+    }

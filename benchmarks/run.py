@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report.  ``python -m benchmarks.run [--fast] [--only fig3,table2]``.
+
+Prints each benchmark's table, then a PASS/FAIL line per claim check; exits
+nonzero if any check fails.  Results also land in results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import pathlib
+import sys
+import time
+
+MODULES = [
+    "table1_transfer",
+    "fig3_loading_time",
+    "fig4_linearity",
+    "fig5_cache_size",
+    "fig6_fetch_size",
+    "fig7_cache_vs_fetch",
+    "fig8_thresholds",
+    "fig9_best_settings",
+    "table2_cost",
+    "beyond_paper",
+    "roofline_report",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="10%% datasets, 1 trial")
+    ap.add_argument("--only", default="", help="comma list of module names")
+    args = ap.parse_args(argv)
+
+    names = [m for m in MODULES if not args.only or m in args.only.split(",")]
+    all_checks, summary = [], {}
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        res = mod.run(fast=args.fast)
+        dt = time.time() - t0
+        print(f"\n=== {res['name']}  [{name}, {dt:.1f}s] ===")
+        print(res["table"])
+        for label, ok, detail in res["checks"]:
+            print(f"  {'PASS' if ok else 'FAIL'}  {label}: {detail}")
+        all_checks += res["checks"]
+        summary[name] = {
+            "name": res["name"],
+            "seconds": round(dt, 1),
+            "checks": [
+                {"label": l, "ok": o, "detail": d} for l, o, d in res["checks"]
+            ],
+        }
+    n_ok = sum(1 for _, ok, _ in all_checks if ok)
+    print(f"\n==== {n_ok}/{len(all_checks)} claim checks passed ====")
+    out = pathlib.Path("results")
+    out.mkdir(exist_ok=True)
+    (out / "benchmarks.json").write_text(json.dumps(summary, indent=1))
+    if n_ok != len(all_checks):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table I: transfer speed of reading MNIST into memory (disk, sequential
+bucket, 16-thread parallel bucket).  Validates the bandwidth-model
+calibration against the paper's measured operating points."""
+from __future__ import annotations
+
+from benchmarks.common import check, fmt_table
+from repro.core import DEFAULT_BUCKET, DEFAULT_DISK
+from repro.core.workloads import MNIST
+
+PAPER = {"disk": 18.63e6, "seq": 49.80e3, "par16": 281.73e3}
+
+
+def run(fast: bool = False) -> dict:
+    s = MNIST.sample_bytes
+    got = {
+        "disk": DEFAULT_DISK.effective_bw,
+        "seq": DEFAULT_BUCKET.sequential_throughput(s),
+        "par16": DEFAULT_BUCKET.parallel_throughput(s, 16),
+    }
+    rows = [
+        ["Disk", f"{got['disk']/1e6:.2f} MB/s", "18.63 MB/s"],
+        ["Object storage (seq)", f"{got['seq']/1e3:.2f} kB/s", "49.80 kB/s"],
+        ["Object storage (16 thr)", f"{got['par16']/1e3:.2f} kB/s", "281.73 kB/s"],
+    ]
+    checks = [
+        check(
+            f"table1/{k}",
+            abs(got[k] - PAPER[k]) / PAPER[k] < 0.10,
+            f"model {got[k]:.3e} vs paper {PAPER[k]:.3e} B/s",
+        )
+        for k in PAPER
+    ]
+    return {
+        "name": "Table I — transfer speeds (model calibration)",
+        "table": fmt_table(["source", "model", "paper"], rows),
+        "rows": rows,
+        "checks": checks,
+    }

@@ -1,0 +1,58 @@
+"""repro.core — the paper's contribution: the DELI data plane.
+
+Public API:
+    stores:      SimulatedBucketStore, FileSystemStore, InMemoryStore, ReliableStore
+    cache:       CappedCache
+    policy:      PrefetchConfig (incl. .fifty_fifty / .full_fetch), PrefetchPlanner
+    runtime:     PrefetchService, CachingDataset, DeliLoader, run_epochs
+    simulation:  SimConfig, simulate_cluster, NodeSimulator
+    models:      BucketModel, DiskModel, PipelineCostModel (Table-I calibrated)
+    cost:        GcpPrices, cost_disk_baseline, cost_bucket, ...
+"""
+from repro.core.bandwidth import (
+    DEFAULT_BUCKET,
+    DEFAULT_DISK,
+    DEFAULT_PIPELINE,
+    BucketModel,
+    DiskModel,
+    PipelineCostModel,
+)
+from repro.core.cache import CappedCache
+from repro.core.clock import RealClock, VirtualClock
+from repro.core.cost import (
+    GcpPrices,
+    WorkloadCostInputs,
+    cost_bucket,
+    cost_disk_baseline,
+    cost_with_listing_cache,
+    cost_with_supersamples,
+)
+from repro.core.dataset import CachingDataset
+from repro.core.listing_cache import ListingCache
+from repro.core.loader import Batch, DeliLoader, run_epochs
+from repro.core.policy import PrefetchConfig, PrefetchPlanner, validate_config_against_cache
+from repro.core.prefetcher import PrefetchService
+from repro.core.sampler import (
+    DistributedPartitionSampler,
+    LocalityAwareSampler,
+    RandomSampler,
+    SequentialSampler,
+)
+from repro.core.simulator import NodeSimulator, SimConfig, mean_data_wait, mean_miss_rate, simulate_cluster
+from repro.core.store import (
+    FileSystemStore,
+    InMemoryStore,
+    ReliableStore,
+    SampleStore,
+    SimulatedBucketStore,
+    StoreError,
+    make_synthetic_payloads,
+)
+from repro.core.supersample import (
+    GroupedPartitionSampler,
+    build_supersample_store_payloads,
+    pack_supersample,
+    unpack_supersample,
+)
+from repro.core.types import EpochStats, FetchRequest, RunStats, Sample, SampleKey, StoreStats
+from repro.core.workloads import CIFAR10, MNIST, PAPER_WORKLOADS, WorkloadSpec, lm_token_workload

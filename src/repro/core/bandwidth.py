@@ -1,0 +1,110 @@
+"""Storage bandwidth/latency models, calibrated to the paper's Table I.
+
+Table I (3-node GCE VMs, us-east-1c, reading MNIST into memory):
+
+    Disk                          18.63 MB/s   (many small files)
+    Object storage, sequential    49.80 kB/s
+    Object storage, 16 threads   281.73 kB/s   (= 5.66x sequential)
+
+Model
+-----
+A bucket GET of ``size`` bytes costs
+
+    t = request_latency + size / per_connection_bw
+
+For MNIST-sized samples (784 B) the latency term dominates, which is exactly
+why the paper observes kB/s-scale throughput.  Calibration:
+
+  * sequential 49.8 kB/s on 784 B objects  =>  request_latency ~= 15.7 ms
+    (784 B / 49.8 kB/s = 15.74 ms; the streaming term at 20 MB/s adds 39 us).
+  * 16 threads give only 5.66x, not 16x (2 vCPUs, GIL, TCP setup): we model
+    sub-linear parallel scaling  eff(n) = n ** alpha  with
+    alpha = ln(5.66)/ln(16) ~= 0.626.
+  * Disk at 18.63 MB/s is a pure-bandwidth regime for the small-file read
+    pattern Table I measures (seek cost folded into the effective rate).
+
+The paper measures *data loading time* at the training loop, which includes
+per-sample CPU work (decode/collate).  We model that as ``cpu_overhead`` per
+sample; it is what keeps the measured disk-vs-bucket gap at the paper's
+8-16x rather than the raw 374x bandwidth ratio (§V-B discussion).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketModel:
+    """Simulated GCS bucket performance model."""
+
+    request_latency_s: float = 784 / 49.80e3 - 784 / 20e6  # ~15.7 ms (Table I)
+    per_connection_bw: float = 20e6  # bytes/s once a GET is streaming
+    parallel_alpha: float = math.log(281.73 / 49.80) / math.log(16.0)  # ~0.626
+    max_connections: int = 16
+    # Listing (Class A) requests: latency per page.
+    listing_latency_s: float = 0.050
+    page_size: int = 1000
+
+    def get_seconds(self, size_bytes: int) -> float:
+        """Duration of a single sequential GET."""
+        return self.request_latency_s + size_bytes / self.per_connection_bw
+
+    def parallel_efficiency(self, n_connections: int) -> float:
+        """Effective speedup of ``n`` concurrent GETs over sequential."""
+        n = max(1, min(n_connections, self.max_connections))
+        return float(n) ** self.parallel_alpha
+
+    def bulk_get_seconds(self, sizes: list, n_connections: int = 16) -> float:
+        """Duration of fetching ``len(sizes)`` objects over a thread pool.
+
+        Total sequential work divided by the calibrated parallel efficiency
+        (processor-sharing approximation of a thread pool on a small VM).
+        """
+        if not sizes:
+            return 0.0
+        seq = sum(self.get_seconds(s) for s in sizes)
+        return seq / self.parallel_efficiency(n_connections)
+
+    def list_seconds(self, n_objects: int) -> float:
+        pages = max(1, math.ceil(n_objects / self.page_size))
+        return pages * self.listing_latency_s
+
+    def sequential_throughput(self, sample_bytes: int) -> float:
+        """bytes/s — should reproduce Table I's 49.8 kB/s at ~1 kB objects."""
+        return sample_bytes / self.get_seconds(sample_bytes)
+
+    def parallel_throughput(self, sample_bytes: int, n: int = 16) -> float:
+        return self.sequential_throughput(sample_bytes) * self.parallel_efficiency(n)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiskModel:
+    """Local persistent-disk model (Table I's small-file read regime)."""
+
+    effective_bw: float = 18.63e6  # bytes/s
+    seek_latency_s: float = 0.0  # folded into effective_bw per Table I
+
+    def get_seconds(self, size_bytes: int) -> float:
+        return self.seek_latency_s + size_bytes / self.effective_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCostModel:
+    """Per-sample CPU-side cost of the data pipeline (decode + collate).
+
+    Calibrated so the measured disk/bucket data-wait ratio lands in the
+    paper's 8-16x band for MNIST-sized samples (see module docstring).
+    """
+
+    cpu_overhead_s: float = 1.3e-3
+    # RAM-tier cache hit (the explicit analogue of MongoDB/WiredTiger's
+    # in-memory cache the paper credits for beating the disk baseline).
+    ram_hit_s: float = 0.05e-3
+    # Disk-tier cache hit: one small read from the local cache spill.
+    disk_hit_s: float = 0.4e-3
+
+
+DEFAULT_BUCKET = BucketModel()
+DEFAULT_DISK = DiskModel()
+DEFAULT_PIPELINE = PipelineCostModel()

@@ -1,0 +1,126 @@
+"""GCP cost model — paper §III-C, Eq. (1)-(5), plus Table II reproduction.
+
+Symbols (paper names kept):
+    n    number of nodes
+    s_r  per-node OS+deps disk, GB
+    s_t  dataset size, GB
+    m    number of samples
+    m_c  samples held in each node's cache
+    e    epochs
+    p    bucket listing page size
+    f    fetch size
+    t_c  compute seconds (per run)
+    t_d  data-wait seconds (per run)
+    c_c  VM $/hour            c_d  disk $/GB/month
+    c_b  bucket $/GB/month    c_A/c_B  $ per 10,000 requests
+
+Constants below reproduce Table II's structure: a 16 GB boot disk at GCP
+pd-standard pricing gives the paper's $0.65/node storage line; the VM rate
+is the n1-highmem-2 + K80 list price with a calibration factor fitted so the
+'Compute + Loading' column of Table II is matched (the paper's exact
+machine-hour accounting isn't published; we document the fit and verify the
+qualitative claims — orderings and which configurations save money).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class GcpPrices:
+    vm_hourly: float = 0.95  # $/h: n1-highmem-2 ($0.1184) + K80 ($0.45), x calibration 1.67
+    disk_gb_month: float = 0.04  # pd-standard
+    bucket_gb_month: float = 0.026  # GCS standard regional
+    class_a_per_10k: float = 0.05  # listing (paper §III-C)
+    class_b_per_10k: float = 0.002  # GETs (paper §III-C)
+    page_size: int = 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCostInputs:
+    n_nodes: int
+    os_disk_gb: float  # s_r
+    dataset_gb: float  # s_t
+    n_samples: int  # m
+    epochs: int  # e
+    compute_seconds: float  # t_c  (whole run, per node)
+    data_wait_seconds: float  # t_d (whole run, per node)
+    cached_samples: int = 0  # m_c
+    fetch_size: int = 0  # f (0 = no prefetching)
+    months: float = 1.0  # billing horizon for storage lines
+
+
+def _tau(prices: GcpPrices, inp: WorkloadCostInputs) -> float:
+    """Eq. (2): tau = c_c * (t_c + t_d)."""
+    hours = (inp.compute_seconds + inp.data_wait_seconds) / 3600.0
+    return prices.vm_hourly * hours
+
+
+def cost_disk_baseline(prices: GcpPrices, inp: WorkloadCostInputs) -> dict:
+    """Eq. (1): the dataset is stored on every node's disk."""
+    storage = prices.disk_gb_month * (inp.dataset_gb + inp.os_disk_gb) * inp.months
+    tau = _tau(prices, inp)
+    return {
+        "api": 0.0,
+        "storage": inp.n_nodes * storage,
+        "compute_loading": inp.n_nodes * tau,
+        "total": inp.n_nodes * (storage + tau),
+    }
+
+
+def _alpha(prices: GcpPrices, inp: WorkloadCostInputs, with_prefetch: bool) -> float:
+    """Eq. (4) / Eq. (5): per-epoch request charge in 'per-10k' units."""
+    m, n, p = inp.n_samples, inp.n_nodes, prices.page_size
+    listings = n * math.ceil(m / p)
+    if with_prefetch:
+        if inp.fetch_size <= 0:
+            raise ValueError("prefetch cost model needs fetch_size > 0")
+        listings *= math.ceil(m / inp.fetch_size)  # naive per-fetch listing
+    return listings * prices.class_a_per_10k + m * prices.class_b_per_10k
+
+
+def cost_bucket(
+    prices: GcpPrices, inp: WorkloadCostInputs, with_prefetch: bool = False
+) -> dict:
+    """Eq. (3) with alpha from Eq. (4) (baseline) or Eq. (5) (DELI)."""
+    m = inp.n_samples
+    bucket_storage = prices.bucket_gb_month * inp.dataset_gb * inp.months
+    per_node_disk = prices.disk_gb_month * (
+        inp.os_disk_gb + (inp.dataset_gb / m) * inp.cached_samples
+    ) * inp.months
+    tau = _tau(prices, inp)
+    api = 1e-4 * inp.epochs * _alpha(prices, inp, with_prefetch)
+    return {
+        "api": api,
+        "storage": bucket_storage + inp.n_nodes * per_node_disk,
+        "compute_loading": inp.n_nodes * tau,
+        "total": bucket_storage + inp.n_nodes * (per_node_disk + tau) + api,
+    }
+
+
+def cost_with_listing_cache(prices: GcpPrices, inp: WorkloadCostInputs) -> dict:
+    """Beyond-paper (§VI): one listing per node per session, not per fetch."""
+    base = cost_bucket(prices, inp, with_prefetch=False)
+    # alpha reverts to Eq. (4) but listings are NOT repeated every epoch:
+    m, n, p = inp.n_samples, inp.n_nodes, prices.page_size
+    api = 1e-4 * (
+        n * math.ceil(m / p) * prices.class_a_per_10k
+        + inp.epochs * m * prices.class_b_per_10k
+    )
+    base = dict(base)
+    base["api"] = api
+    base["total"] = base["storage"] + base["compute_loading"] + api
+    return base
+
+
+def cost_with_supersamples(
+    prices: GcpPrices, inp: WorkloadCostInputs, group_size: int
+) -> dict:
+    """Beyond-paper (§VI): grouping ``group_size`` samples per object divides
+    the Class B request count (and the listing length) by the group size."""
+    m_groups = math.ceil(inp.n_samples / group_size)
+    grouped = dataclasses.replace(inp, n_samples=m_groups)
+    fetch_groups = max(1, inp.fetch_size // group_size) if inp.fetch_size else 0
+    grouped = dataclasses.replace(grouped, fetch_size=fetch_groups)
+    return cost_bucket(prices, grouped, with_prefetch=inp.fetch_size > 0)

@@ -1,0 +1,72 @@
+"""Dataset layer: cache-through access to a sample store.
+
+``CachingDataset`` is the analogue of the paper's custom Dataset wrapper
+(§IV-B): a ``get`` first consults the node-local capped cache; on a miss it
+falls back to the backing store (the bucket), and — *only when no pre-fetch
+service owns cache population* — inserts the fetched sample ("we choose to
+not have the worker perform a cache insert in this case, as the pre-fetch
+service will eventually perform this insert operation", §IV-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional, Tuple
+
+from repro.core.cache import CappedCache
+from repro.core.store import SampleStore
+
+
+@dataclasses.dataclass
+class AccessResult:
+    payload: bytes
+    hit: bool
+    ram_hit: bool = False
+
+
+class CachingDataset:
+    """Cache-through dataset over (store, cache)."""
+
+    def __init__(
+        self,
+        store: SampleStore,
+        cache: Optional[CappedCache],
+        insert_on_miss: bool = True,
+        transform: Optional[Callable[[bytes], bytes]] = None,
+    ):
+        self.store = store
+        self.cache = cache
+        self.insert_on_miss = insert_on_miss
+        self.transform = transform
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, index: int) -> AccessResult:
+        if self.cache is not None:
+            ram_before = self.cache.stats.ram_hits
+            cached = self.cache.get(index)
+            if cached is not None:
+                with self._lock:
+                    self.hits += 1
+                ram_hit = self.cache.stats.ram_hits > ram_before
+                payload = self.transform(cached) if self.transform else cached
+                return AccessResult(payload, hit=True, ram_hit=ram_hit)
+        payload = self.store.get(index)
+        with self._lock:
+            self.misses += 1
+        if self.cache is not None and self.insert_on_miss:
+            self.cache.put(index, payload)
+        if self.transform:
+            payload = self.transform(payload)
+        return AccessResult(payload, hit=False)
+
+    def __getitem__(self, index: int) -> bytes:
+        return self.get(index).payload
+
+    def reset_counters(self) -> Tuple[int, int]:
+        with self._lock:
+            h, m = self.hits, self.misses
+            self.hits = 0
+            self.misses = 0
+        return h, m

@@ -1,0 +1,250 @@
+"""Discrete-event simulator of the DELI node pipeline.
+
+Why a simulator: the container has no cloud and no wall-clock budget for
+hundred-second epochs; the paper's results are *timing races* between the
+training loop and the pre-fetch service.  The simulator advances a virtual
+clock through exactly the mechanism the threaded runtime implements — same
+``PrefetchPlanner`` policy object, same ``CappedCache`` class, same
+calibrated ``BucketModel`` — so its predictions are the runtime's behaviour
+(property-tested against the threaded pipeline in
+tests/test_core_sim_and_cost.py).
+
+Event structure (single service worker, paper §IV-C: one subprocess per
+request on a 2-vCPU VM => effectively serialized):
+
+  * the training loop is the driving process: it consumes samples in
+    planner order, paying hit/miss latencies and per-batch compute;
+  * fetch rounds queue on the service; round r starts at
+    max(request time, completion of round r-1), runs for the calibrated
+    bulk duration, and bulk-inserts at completion;
+  * cache inserts/evictions are applied lazily: before each lookup, all
+    rounds with completion <= now are folded into the cache.
+
+Measured outputs per epoch = the paper's metrics: miss rate, data-wait.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.bandwidth import (
+    DEFAULT_BUCKET,
+    DEFAULT_DISK,
+    DEFAULT_PIPELINE,
+    BucketModel,
+    DiskModel,
+    PipelineCostModel,
+)
+from repro.core.cache import CappedCache
+from repro.core.policy import PrefetchConfig, PrefetchPlanner
+from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler
+from repro.core.types import EpochStats, StoreStats
+from repro.core.workloads import WorkloadSpec
+
+_SENTINEL = b"\x00"  # cache payloads are placeholders; experiments count items
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """One experimental condition (a bar in the paper's figures)."""
+
+    source: str = "bucket"  # "bucket" | "disk"
+    cache_items: Optional[int] = None  # None = no cache; 0 < n = capped; -1 = unlimited
+    prefetch: Optional[PrefetchConfig] = None  # None = no prefetching
+    n_connections: int = 16
+    streaming_insert: bool = False  # beyond-paper knob
+    list_every_fetch: bool = True  # paper prototype; False = listing cache
+    locality_aware: bool = False  # beyond-paper partitioner
+
+    def label(self) -> str:
+        if self.source == "disk":
+            return "disk"
+        if self.cache_items is None:
+            return "gcp-direct"
+        cache = "unlimited" if self.cache_items == -1 else str(self.cache_items)
+        if self.prefetch is None:
+            return f"cache[{cache}]"
+        return (
+            f"cache[{cache}]+pf(f={self.prefetch.fetch_size},"
+            f"T={self.prefetch.prefetch_threshold})"
+        )
+
+
+@dataclasses.dataclass
+class _ServiceState:
+    free_at: float = 0.0
+    pending: List[Tuple[float, List[int]]] = dataclasses.field(default_factory=list)
+    rounds: int = 0
+
+
+class NodeSimulator:
+    """Simulates one node's data plane across epochs (cache persists)."""
+
+    def __init__(
+        self,
+        spec: WorkloadSpec,
+        cfg: SimConfig,
+        bucket: BucketModel = DEFAULT_BUCKET,
+        disk: DiskModel = DEFAULT_DISK,
+        pipeline: PipelineCostModel = DEFAULT_PIPELINE,
+    ):
+        self.spec = spec
+        self.cfg = cfg
+        self.bucket = bucket
+        self.disk = disk
+        self.pipeline = pipeline
+        self.t = 0.0
+        self.store_stats = StoreStats()
+        self.cache: Optional[CappedCache] = None
+        if cfg.cache_items is not None:
+            max_items = None if cfg.cache_items == -1 else cfg.cache_items
+            self.cache = CappedCache(max_items=max_items)
+        self.service = _ServiceState()
+
+    # -- store timing --------------------------------------------------------
+    def _sequential_get_s(self) -> float:
+        return self.bucket.get_seconds(self.spec.sample_bytes)
+
+    def _bulk_get_s(self, n: int) -> float:
+        return self.bucket.bulk_get_seconds(
+            [self.spec.sample_bytes] * n, self.cfg.n_connections
+        )
+
+    # -- service -------------------------------------------------------------
+    def _issue_round(self, keys: List[int]) -> None:
+        start = max(self.t, self.service.free_at)
+        listing_s = 0.0
+        if self.cfg.list_every_fetch or self.service.rounds == 0:
+            listing_s = self.bucket.list_seconds(self.spec.n_samples)
+            self.store_stats.class_a_requests += max(
+                1, -(-self.spec.n_samples // self.bucket.page_size)
+            )
+        # The round's keys are known when it is issued, so the (naive)
+        # per-round listing proceeds CONCURRENTLY with the parallel GETs —
+        # it is pure Class A accounting traffic, not a serialization point.
+        dur = max(listing_s, self._bulk_get_s(len(keys)))
+        done = start + dur
+        self.store_stats.class_b_requests += len(keys)
+        self.store_stats.bytes_read += len(keys) * self.spec.sample_bytes
+        self.store_stats.read_seconds += dur
+        if self.cfg.streaming_insert:
+            # Spread inserts uniformly across the round duration.
+            per = dur / len(keys)
+            for j, k in enumerate(keys):
+                self.service.pending.append((start + per * (j + 1), [k]))
+        else:
+            self.service.pending.append((done, list(keys)))
+        self.service.free_at = done
+        self.service.rounds += 1
+
+    def _apply_completed_inserts(self) -> None:
+        assert self.cache is not None
+        remaining = []
+        for done, keys in self.service.pending:
+            if done <= self.t:
+                for k in keys:
+                    self.cache.put(k, _SENTINEL)
+            else:
+                remaining.append((done, keys))
+        self.service.pending = remaining
+
+    # -- sample access -------------------------------------------------------
+    def _access(self, idx: int, stats: EpochStats) -> None:
+        pipeline = self.pipeline
+        wait = pipeline.cpu_overhead_s
+        if self.cfg.source == "disk":
+            wait += self.disk.get_seconds(self.spec.sample_bytes)
+            stats.misses += 1  # no cache in the disk baseline; count as miss=read
+        elif self.cache is None:
+            # Direct-from-bucket baseline: sequential fallback GET.
+            wait += self._sequential_get_s()
+            stats.misses += 1
+            self.store_stats.class_b_requests += 1
+            self.store_stats.bytes_read += self.spec.sample_bytes
+        else:
+            self._apply_completed_inserts()
+            if self.cache.get(idx) is not None:
+                wait += pipeline.ram_hit_s
+                stats.hits += 1
+                stats.ram_hits += 1
+            else:
+                wait += self._sequential_get_s()
+                stats.misses += 1
+                self.store_stats.class_b_requests += 1
+                self.store_stats.bytes_read += self.spec.sample_bytes
+                if self.cfg.prefetch is None:
+                    # Cache-only mode inserts on miss (paper §IV-B); with a
+                    # pre-fetch service the worker does not (§IV-C).
+                    self.cache.put(idx, _SENTINEL)
+        self.t += wait
+        stats.samples += 1
+        stats.data_wait_seconds += wait
+
+    # -- epoch ----------------------------------------------------------------
+    def run_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> EpochStats:
+        stats = EpochStats(epoch=epoch, node=node)
+        ev0 = self.cache.stats.evictions if self.cache else 0
+        pf = self.cfg.prefetch if self.cfg.prefetch is not None else PrefetchConfig.disabled()
+        if self.cfg.source == "disk" or self.cache is None:
+            pf = PrefetchConfig.disabled()
+        planner = PrefetchPlanner(order, pf)
+        samples_in_batch = 0
+        for idx, round_ in planner:
+            if round_ is not None:
+                self._issue_round(list(round_))
+            self._access(idx, stats)
+            samples_in_batch += 1
+            if samples_in_batch == self.spec.batch_size:
+                self.t += self.spec.compute_per_batch_s
+                stats.compute_seconds += self.spec.compute_per_batch_s
+                samples_in_batch = 0
+        if self.cache:
+            stats.evictions = self.cache.stats.evictions - ev0
+        return stats
+
+
+def simulate_cluster(
+    spec: WorkloadSpec,
+    cfg: SimConfig,
+    epochs: int = 2,
+    seed: int = 0,
+    bucket: BucketModel = DEFAULT_BUCKET,
+    disk: DiskModel = DEFAULT_DISK,
+    pipeline: PipelineCostModel = DEFAULT_PIPELINE,
+) -> Tuple[List[EpochStats], StoreStats]:
+    """Run all nodes of the paper's setup for N epochs; returns per-node
+    per-epoch stats + aggregate store accounting."""
+    nodes = [NodeSimulator(spec, cfg, bucket, disk, pipeline) for _ in range(spec.n_nodes)]
+    samplers: List = []
+    for rank in range(spec.n_nodes):
+        if cfg.locality_aware:
+            samplers.append(
+                LocalityAwareSampler(spec.n_samples, rank, spec.n_nodes, seed=seed)
+            )
+        else:
+            samplers.append(
+                DistributedPartitionSampler(spec.n_samples, rank, spec.n_nodes, seed=seed)
+            )
+    all_stats: List[EpochStats] = []
+    for e in range(epochs):
+        if cfg.locality_aware:
+            views = [n.cache.keys() if n.cache else [] for n in nodes]
+            for s in samplers:
+                s.update_cache_views(views)
+        for rank, (node, sampler) in enumerate(zip(nodes, samplers)):
+            sampler.set_epoch(e)
+            all_stats.append(node.run_epoch(e, sampler.indices(), node=rank))
+    agg = StoreStats()
+    for n in nodes:
+        agg = agg.merge(n.store_stats)
+    return all_stats, agg
+
+
+def mean_miss_rate(stats: List[EpochStats], epoch: int) -> float:
+    rows = [s for s in stats if s.epoch == epoch]
+    return sum(r.miss_rate for r in rows) / len(rows)
+
+
+def mean_data_wait(stats: List[EpochStats], epoch: int) -> float:
+    rows = [s for s in stats if s.epoch == epoch]
+    return sum(r.data_wait_seconds for r in rows) / len(rows)

@@ -1,0 +1,96 @@
+"""Super-samples (beyond-paper, §VI): pack multiple samples per bucket object.
+
+Groups ``group_size`` consecutive samples into one object with a trivial
+length-prefixed framing.  Effects:
+
+  * Class B requests / epoch drop by ~group_size (cost Eq. 3 term);
+  * per-request latency (the dominant term for kB-scale samples — see
+    bandwidth.py) is amortized: effective sequential throughput rises from
+    size/(L + size/B) to G*size/(L + G*size/B);
+  * the partitioner must deal in groups so a node never downloads an object
+    to use only part of it ("the partitioning strategy would need to be
+    altered to account for them", §VI) — ``GroupedPartitionSampler`` below
+    permutes groups, not samples (shuffle granularity trade-off recorded in
+    DESIGN.md).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sampler import Sampler
+
+_HDR = struct.Struct("<I")
+
+
+def pack_supersample(payloads: Sequence[bytes]) -> bytes:
+    parts = [_HDR.pack(len(payloads))]
+    for p in payloads:
+        parts.append(_HDR.pack(len(p)))
+        parts.append(p)
+    return b"".join(parts)
+
+
+def unpack_supersample(blob: bytes) -> List[bytes]:
+    (n,) = _HDR.unpack_from(blob, 0)
+    off = _HDR.size
+    out = []
+    for _ in range(n):
+        (ln,) = _HDR.unpack_from(blob, off)
+        off += _HDR.size
+        out.append(blob[off : off + ln])
+        off += ln
+    if off != len(blob):
+        raise ValueError("trailing bytes in super-sample")
+    return out
+
+
+def build_supersample_store_payloads(
+    payloads: Dict[int, bytes], group_size: int
+) -> Tuple[Dict[int, bytes], Dict[int, Tuple[int, int]]]:
+    """Pack per-sample payloads into grouped objects.
+
+    Returns (group_payloads, sample_to_group): group object ``g`` holds
+    samples [g*G, (g+1)*G); sample_to_group maps sample idx -> (group idx,
+    offset within group).
+    """
+    if group_size < 1:
+        raise ValueError("group_size must be >= 1")
+    indices = sorted(payloads)
+    groups: Dict[int, bytes] = {}
+    mapping: Dict[int, Tuple[int, int]] = {}
+    for gstart in range(0, len(indices), group_size):
+        members = indices[gstart : gstart + group_size]
+        g = gstart // group_size
+        groups[g] = pack_supersample([payloads[i] for i in members])
+        for off, i in enumerate(members):
+            mapping[i] = (g, off)
+    return groups, mapping
+
+
+class GroupedPartitionSampler(Sampler):
+    """Distributed partitioner over super-sample groups.
+
+    Yields *group* indices: a random permutation of groups each epoch,
+    strided across nodes — so each GET is fully consumed by its node.
+    """
+
+    def __init__(self, n_groups: int, rank: int, world: int, seed: int = 0):
+        super().__init__(n_groups)
+        self.rank = rank
+        self.world = world
+        self.seed = seed
+
+    @property
+    def partition_size(self) -> int:
+        return self.n_samples // self.world
+
+    def indices(self) -> List[int]:
+        perm = np.random.default_rng((self.seed, self.epoch)).permutation(self.n_samples)
+        usable = self.partition_size * self.world
+        return perm[:usable][self.rank :: self.world].tolist()
+
+    def __len__(self) -> int:
+        return self.partition_size

@@ -1,0 +1,116 @@
+"""Core datatypes shared across the DELI data plane.
+
+Everything in the data plane speaks in terms of *sample keys* (dataset
+indices), *payloads* (bytes), and *fetch requests* (ordered batches of keys
+handed to the pre-fetch service).  Keeping these plain dataclasses (no jax,
+no numpy requirements) lets the policy layer, the discrete-event simulator
+and the threaded runtime share one vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+
+class StorageClass(enum.Enum):
+    """GCP object-store request classes (drives the cost model)."""
+
+    CLASS_A = "class_a"  # listing / mutation requests ($0.05 / 10k, paper §III-C)
+    CLASS_B = "class_b"  # object GET requests          ($0.002 / 10k, paper §III-C)
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleKey:
+    """Identity of one training sample within a session.
+
+    ``index`` is the dataset index; ``session`` mirrors the paper's
+    "unique ID for the current training session" used in the MongoDB
+    multi-key index (§IV-B) so stale cache entries from a previous run
+    never produce hits.
+    """
+
+    index: int
+    session: str = "default"
+
+
+@dataclasses.dataclass
+class Sample:
+    key: SampleKey
+    payload: bytes
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+
+@dataclasses.dataclass
+class FetchRequest:
+    """One pre-fetch round: 'cache these keys, in this order'."""
+
+    keys: tuple
+    request_id: int
+    issued_at: float  # seconds (virtual or wall clock)
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Request accounting for one store (feeds the cost model Eq. 3-5)."""
+
+    class_a_requests: int = 0
+    class_b_requests: int = 0
+    bytes_read: int = 0
+    read_seconds: float = 0.0  # total time spent inside reads
+
+    def merge(self, other: "StoreStats") -> "StoreStats":
+        return StoreStats(
+            self.class_a_requests + other.class_a_requests,
+            self.class_b_requests + other.class_b_requests,
+            self.bytes_read + other.bytes_read,
+            self.read_seconds + other.read_seconds,
+        )
+
+
+@dataclasses.dataclass
+class EpochStats:
+    """Per-node, per-epoch data-plane metrics (the paper's two metrics)."""
+
+    epoch: int
+    node: int
+    samples: int = 0
+    hits: int = 0
+    misses: int = 0
+    data_wait_seconds: float = 0.0  # time the training loop blocked on data
+    compute_seconds: float = 0.0
+    evictions: int = 0
+    ram_hits: int = 0  # two-tier cache: hits served from the RAM tier
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.samples if self.samples else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return 1.0 - self.miss_rate
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Aggregate over epochs/nodes; what benchmarks report."""
+
+    epochs: Sequence[EpochStats]
+    store_stats: Optional[StoreStats] = None
+
+    def epoch(self, e: int) -> Sequence[EpochStats]:
+        return [s for s in self.epochs if s.epoch == e]
+
+    def mean_miss_rate(self, e: int) -> float:
+        rows = self.epoch(e)
+        return sum(r.miss_rate for r in rows) / len(rows) if rows else 0.0
+
+    def mean_data_wait(self, e: int) -> float:
+        rows = self.epoch(e)
+        return sum(r.data_wait_seconds for r in rows) / len(rows) if rows else 0.0
+
+    def total_data_wait(self) -> float:
+        return sum(r.data_wait_seconds for r in self.epochs)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (
+    decode_tokens,
+    make_lm_payloads,
+    make_lm_pipeline,
+)

@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_spec,
+    input_shardings,
+    param_shardings,
+    state_shardings,
+)

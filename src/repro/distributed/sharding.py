@@ -1,0 +1,256 @@
+"""Sharding rules: parameter / optimizer / activation / decode-state
+PartitionSpecs for the (pod, data, model) production mesh.
+
+Scheme (MaxText-style 2-D sharding):
+  * tensor parallel on ``model``: attention q/kv projections sharded on the
+    flattened head dim, MLP on d_ff, MoE experts on E (expert parallelism),
+    vocab on V;
+  * FSDP on (``pod``, ``data``): the *other* matrix dim of every large
+    parameter (and its optimizer moments) is sharded across the batch axes;
+    XLA GSPMD inserts the per-layer all-gather inside the scan-over-periods
+    loop, which is exactly FSDP's gather-on-use.
+
+Every rule is applied *best-effort*: a dim is only sharded if the axis size
+divides it (``_fit``), so odd published shapes (56 heads, vocab 504, SSM
+in_proj widths) degrade to replication of that dim instead of failing to
+lower.  The roofline report calls out where this costs performance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    fsdp_axes: Tuple[str, ...]  # ("pod","data") or ("data",)
+    model_axis: str = "model"
+    fsdp_params: bool = True  # False => pure TP (params replicated over data)
+
+    @property
+    def fsdp_size(self) -> int:
+        n = 1
+        for a in self.fsdp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def _fit(self, dim: int, axes, size: int):
+        """axes if they evenly divide dim, else None (replicate)."""
+        return axes if dim % size == 0 else None
+
+    def tp(self, dim: int):
+        return self._fit(dim, self.model_axis, self.model_size)
+
+    def fsdp(self, dim: int):
+        if not self.fsdp_params:
+            return None
+        return self._fit(dim, self.fsdp_axes, self.fsdp_size)
+
+    def matrix(self, rows: int, cols: int, tp_dim: int) -> P:
+        """2-D param (rows, cols); ``tp_dim`` says which dim is TP."""
+        if tp_dim == 1:
+            return P(self.fsdp(rows), self.tp(cols))
+        return P(self.tp(rows), self.fsdp(cols))
+
+
+def _leaf_spec(rules: ShardingRules, cfg: ArchConfig, path: Tuple[str, ...], leaf) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path.
+
+    Stacked layer params carry a leading n_periods axis (never sharded).
+    """
+    name = path[-1]
+    shape = leaf.shape
+    stacked = path[0] == "stack"
+    dims = shape[1:] if stacked else shape  # strip period axis
+    lead = (None,) if stacked else ()
+
+    def out(*spec):
+        return P(*lead, *spec)
+
+    # ---- embeddings / head -------------------------------------------------
+    if name == "embed":
+        return P(rules.tp(shape[0]), rules.fsdp(shape[1]))  # (V, d)
+    if name == "head":
+        return P(rules.fsdp(shape[0]), rules.tp(shape[1]))  # (d, V)
+    if name in ("final_norm",):
+        return P(None)
+
+    # ---- norms / small vectors --------------------------------------------
+    if name.startswith("norm") or name in ("gate_norm", "A_log", "D", "dt_bias", "conv_b"):
+        return out(*([None] * len(dims)))
+    if name in ("bq", "bk", "bv"):
+        return out(rules.tp(dims[0]))
+
+    # ---- attention ----------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return out(rules.fsdp(dims[0]), rules.tp(dims[1]))
+    if name == "wo":
+        return out(rules.tp(dims[0]), rules.fsdp(dims[1]))
+
+    # ---- dense MLP ----------------------------------------------------------
+    if name in ("w_gate", "w_up", "w_down") and len(dims) == 2:
+        if name == "w_down":
+            return out(rules.tp(dims[0]), rules.fsdp(dims[1]))
+        return out(rules.fsdp(dims[0]), rules.tp(dims[1]))
+
+    # ---- MoE (leading E dim -> expert parallelism on model) ----------------
+    if name == "router":
+        return out(rules.fsdp(dims[0]), None)
+    if name in ("w_gate", "w_up", "w_down") and len(dims) == 3:
+        return out(rules.tp(dims[0]), rules.fsdp(dims[1]), None)
+
+    # ---- SSM ----------------------------------------------------------------
+    if name == "in_proj":
+        return out(rules.fsdp(dims[0]), rules.tp(dims[1]))
+    if name == "out_proj":
+        return out(rules.tp(dims[0]), rules.fsdp(dims[1]))
+    if name == "conv_w":
+        return out(None, rules.tp(dims[1]))
+
+    return out(*([None] * len(dims)))  # default: replicate
+
+
+def _tree_paths(tree, prefix=()):
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            yield from _tree_paths(v, prefix + (k,))
+        else:
+            yield prefix + (k,), v
+
+
+def param_shardings(rules: ShardingRules, cfg: ArchConfig, shapes: Dict) -> Dict:
+    """NamedSharding pytree matching a param (or opt-moment) shape pytree."""
+    out = jax.tree.map(lambda _: None, shapes)
+
+    def build(tree, spec_tree):
+        for path, leaf in _tree_paths(tree):
+            spec = _leaf_spec(rules, cfg, path, leaf)
+            node = spec_tree
+            for k in path[:-1]:
+                node = node[k]
+            node[path[-1]] = NamedSharding(rules.mesh, spec)
+
+    build(shapes, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Inputs / activations / decode state
+# ---------------------------------------------------------------------------
+def batch_spec(rules: ShardingRules, global_batch: int, extra_dims: int = 1) -> P:
+    """Spec for a (B, ...) input: batch over as many fsdp axes as divide."""
+    axes = []
+    b = global_batch
+    for a in rules.fsdp_axes:
+        n = rules.mesh.shape[a]
+        if b % n == 0:
+            axes.append(a)
+            b //= n
+    bspec = tuple(axes) if axes else None
+    return P(bspec, *([None] * extra_dims))
+
+
+def input_shardings(rules: ShardingRules, cfg: ArchConfig, batch: Dict) -> Dict:
+    """Shardings for a host batch dict (tokens/labels/embeds)."""
+    out = {}
+    for k, v in batch.items():
+        out[k] = NamedSharding(
+            rules.mesh, batch_spec(rules, v.shape[0], extra_dims=v.ndim - 1)
+        )
+    return out
+
+
+def _greedy_batch_axes(rules: ShardingRules, batch_dim: int):
+    """fsdp axes that evenly divide the batch (prefix-greedy); remainder axes."""
+    axes_b, b = [], batch_dim
+    for a in rules.fsdp_axes:
+        n = rules.mesh.shape[a]
+        if b % n == 0:
+            axes_b.append(a)
+            b //= n
+    leftover = [a for a in rules.fsdp_axes if a not in axes_b]
+    return axes_b, leftover
+
+
+def kv_cache_spec(rules: ShardingRules, batch_dim: int, seq_dim: int, kv_heads: int) -> P:
+    """(B, S, KV, hd) KV-cache spec.
+
+    Batch over the fsdp axes that fit.  The ``model`` axis (plus any fsdp
+    axis batch couldn't use, e.g. long_500k's batch=1) then shards KV heads
+    when divisible, else the *sequence*: a sequence-sharded cache makes
+    decode attention a partial-reduction + small all-reduce over scores —
+    flash-decode's parallelism, expressed through GSPMD."""
+    axes_b, leftover = _greedy_batch_axes(rules, batch_dim)
+    extra = leftover + [rules.model_axis]
+    kv_axes, s_axes = [], []
+    kv, s = kv_heads, seq_dim
+    for a in extra:
+        n = rules.mesh.shape[a]
+        if kv % n == 0:
+            kv_axes.append(a)
+            kv //= n
+        elif s % n == 0:
+            s_axes.append(a)
+            s //= n
+    return P(tuple(axes_b) or None, tuple(s_axes) or None, tuple(kv_axes) or None, None)
+
+
+def ssm_state_spec(rules: ShardingRules, batch_dim: int, n_heads: int) -> P:
+    """(B, H, P, N) SSD-state spec: batch over fitting fsdp axes, heads over
+    the model axis (+ unused fsdp axes) when divisible."""
+    axes_b, leftover = _greedy_batch_axes(rules, batch_dim)
+    h_axes, h = [], n_heads
+    for a in leftover + [rules.model_axis]:
+        n = rules.mesh.shape[a]
+        if h % n == 0:
+            h_axes.append(a)
+            h //= n
+    return P(tuple(axes_b) or None, tuple(h_axes) or None, None, None)
+
+
+def state_shardings(rules: ShardingRules, cfg: ArchConfig, state_shapes) -> object:
+    """Shardings for the decode state (caches, kv_len).
+
+    Cache leaves are stacked (n_periods, B, S, KV, hd) / (n_periods, B, ...).
+    """
+    caches, kv_len = state_shapes
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        if name in ("k", "v"):
+            _, B, S, KV, hd = leaf.shape
+            return NamedSharding(rules.mesh, P(None, *kv_cache_spec(rules, B, S, KV)))
+        if name == "state":
+            _, B, H, Pd, N = leaf.shape
+            return NamedSharding(rules.mesh, P(None, *ssm_state_spec(rules, B, H)))
+        # conv tail (n_periods, B, K-1, C): batch + channel best-effort
+        _, B, K1, C = leaf.shape
+        axes_b, leftover = _greedy_batch_axes(rules, B)
+        c_axes, c = [], C
+        for a in leftover + [rules.model_axis]:
+            n = rules.mesh.shape[a]
+            if c % n == 0:
+                c_axes.append(a)
+                c //= n
+        return NamedSharding(
+            rules.mesh, P(None, tuple(axes_b) or None, None, tuple(c_axes) or None)
+        )
+
+    out = jax.tree.map(lambda _: None, caches)
+    for path, leaf in _tree_paths(caches):
+        node = out
+        for k in path[:-1]:
+            node = node[k]
+        node[path[-1]] = spec_for(path, leaf)
+    kv_spec = NamedSharding(rules.mesh, batch_spec(rules, kv_len.shape[0], extra_dims=0))
+    return out, kv_spec

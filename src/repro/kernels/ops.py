@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the container target) and False on
+real TPU — pass explicitly to override.  These are the functions the model
+zoo calls when ``use_pallas`` is enabled; each has a pure-jnp oracle in
+kernels/ref.py with identical signature/semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Blocked online-softmax attention. q (B,Sq,H,hd); k/v (B,Sk,KV,hd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128, interpret: Optional[bool] = None):
+    """Mamba-2 SSD chunked scan. Returns (y (B,S,H,P), state (B,H,P,N))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)

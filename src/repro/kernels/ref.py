@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (same signatures as ops.py).
+
+These delegate to the model zoo's XLA reference implementations — the
+kernels and the models literally share one definition of the math, so a
+kernel<->ref allclose is also a kernel<->model allclose.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.layers import AttnMask, plain_attention
+from repro.models.ssm import ssd_reference
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None):
+    return plain_attention(q, k, v, AttnMask(causal=causal, window=window))
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D):
+    """Sequential-scan oracle; returns (y, final_state)."""
+    y = ssd_reference(
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        A.astype(jnp.float32),
+        Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32),
+        D.astype(jnp.float32),
+    )
+    # final state: recompute by stepping (oracle-grade, O(S))
+    import jax
+
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(S):
+        decay = jnp.exp(dt[:, t].astype(jnp.float32) * A.astype(jnp.float32))
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t].astype(jnp.float32), Bh[:, t], x[:, t].astype(jnp.float32)
+        )
+    return y.astype(x.dtype), state

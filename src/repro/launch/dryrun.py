@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  512 host devices let jax.make_mesh build the production meshes
+# (16x16 single-pod, 2x16x16 multi-pod) on this CPU-only container.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production mesh, prove it fits (memory analysis), and
+extract the roofline terms (cost analysis + post-SPMD collective bytes).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-130m
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out results/
+
+Results are written one JSON per cell so the sweep is resumable
+(--skip-existing) — a failed cell never loses completed work.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.distributed.sharding import ShardingRules, param_shardings
+from repro.launch import roofline as R
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.steps import step_for_cell
+from repro.models import model as M
+from repro.models.config import applicable_shapes
+from repro.training.optimizer import OptSettings, opt_state_shapes
+
+
+def _sharded_structs(shapes, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), shapes, shardings
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose: bool = True,
+    save_hlo: str = "",
+    microbatches: int = None,
+    step_builder=step_for_cell,
+    mesh_shape: tuple = None,  # §Perf variants: e.g. (32, 8), (256, 1)
+    fsdp_params: bool = True,
+    cfg_overrides: dict = None,  # §Perf variants: e.g. {"attn_chunk": 4096}
+    remat_policy: str = "minimal",
+) -> dict:
+    import dataclasses as _dc
+
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape_cfg = {s.name: s for s in applicable_shapes(cfg)}[shape_name]
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_custom_mesh
+
+        mesh = make_custom_mesh(*mesh_shape)
+        mesh_name = f"pod{mesh_shape[0]}x{mesh_shape[1]}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rules = ShardingRules(mesh, fsdp_axes=batch_axes(mesh), fsdp_params=fsdp_params)
+
+    pshapes = M.param_shapes(cfg)
+    pshard = param_shardings(rules, cfg, pshapes)
+    params_in = _sharded_structs(pshapes, pshard)
+
+    step, takes_opt, n_micro = step_builder(
+        cfg, shape_cfg, rules, microbatches=microbatches, remat_policy=remat_policy
+    )
+    args = list(input_specs(cfg, shape_cfg, rules))
+    if takes_opt:
+        settings = OptSettings.auto(cfg.param_count())
+        oshapes = opt_state_shapes(pshapes, settings)
+        oshard = {
+            "m": pshard,
+            "v": pshard,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        args = [params_in, _sharded_structs(oshapes, oshard)] + args
+    else:
+        args = [params_in] + args
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits
+        cost = compiled.cost_analysis()
+        print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+        hlo = compiled.as_text()
+
+    if save_hlo:
+        import gzip
+
+        pathlib.Path(save_hlo).parent.mkdir(parents=True, exist_ok=True)
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    report = R.analyze(
+        arch, shape_name, mesh_name, mesh.size, cost, hlo, cfg, shape_cfg
+    )
+    mem_fields = {}
+    for f in (
+        "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+        "generated_code_size_in_bytes", "alias_size_in_bytes",
+    ):
+        v = getattr(mem, f, None)
+        if v is not None:
+            mem_fields[f] = int(v)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "microbatches": n_micro,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_fields,
+        "roofline": report.to_json(),
+    }
+    if verbose:
+        r = report
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] compute={r.compute_s:.4f}s "
+            f"memory={r.memory_s:.4f}s collective={r.collective_s:.4f}s "
+            f"dominant={r.dominant} useful={r.useful_ratio:.2f} "
+            f"roofline_frac={r.roofline_fraction:.3f}"
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all applicable)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun", help="output dir (one JSON per cell)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument(
+        "--save-hlo", action="store_true",
+        help="also write <out>/hlo/<cell>.txt.gz (post-SPMD module, for offline analysis)",
+    )
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else configs.ARCH_IDS
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = configs.get(arch)
+        shapes = [s.name for s in applicable_shapes(cfg)]
+        if args.shape:
+            if args.shape not in shapes:
+                print(f"SKIP {arch} x {args.shape}: not applicable")
+                continue
+            shapes = [args.shape]
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                path = outdir / f"{arch}__{shape_name}__{mesh_name}.json"
+                if args.skip_existing and path.exists():
+                    print(f"SKIP (exists) {path.name}")
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_name} ===", flush=True)
+                hlo_path = (
+                    str(outdir / "hlo" / f"{arch}__{shape_name}__{mesh_name}.txt.gz")
+                    if args.save_hlo
+                    else ""
+                )
+                try:
+                    result = run_cell(arch, shape_name, multi, save_hlo=hlo_path)
+                except Exception as e:  # record the failure, keep sweeping
+                    traceback.print_exc()
+                    result = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures.append(path.name)
+                path.write_text(json.dumps(result, indent=1))
+    if failures:
+        print(f"FAILED cells ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print("all requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  The dry-run lowers against these.
+
+Per the assignment:
+  * train_4k / prefill_32k feed (tokens, labels) / (tokens,);
+  * decode_32k / long_500k feed ONE new token + a decode state whose KV/SSM
+    caches are sized for ``seq_len`` (they lower ``serve_step``);
+  * [vlm] adds precomputed patch embeddings, [audio] replaces tokens with
+    precomputed frame embeddings (modality frontends are stubs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    input_shardings,
+    state_shardings,
+)
+from repro.models import model as M
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+def _struct(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool) -> Dict:
+    """Host-batch ShapeDtypeStructs (no shardings attached yet)."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict = {}
+    if cfg.frontend == "frame":
+        out["frame_embeds"] = _struct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = _struct((B, S), jnp.int32)
+    if with_labels:
+        out["labels"] = _struct((B, S), jnp.int32)
+    if cfg.frontend == "patch":
+        out["patch_embeds"] = _struct((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    rules: Optional[ShardingRules] = None,
+) -> Tuple:
+    """The non-parameter inputs for this cell's step function, as sharded
+    ShapeDtypeStructs, in the step's argument order.
+
+    train:    (batch,)
+    prefill:  (batch,)
+    decode:   (state, tokens, cache_pos)
+    """
+    if shape.kind in ("train", "prefill"):
+        batch = batch_structs(cfg, shape, with_labels=shape.kind == "train")
+        if rules is not None:
+            sh = input_shardings(rules, cfg, batch)
+            batch = {k: _struct(v.shape, v.dtype, sh[k]) for k, v in batch.items()}
+        return (batch,)
+
+    # decode: one new token against a seq_len-sized cache
+    B, S = shape.global_batch, shape.seq_len
+    state_shapes = jax.eval_shape(lambda: M.init_decode_state(cfg, B, S))
+    tokens = _struct((B, 1), jnp.int32)
+    cache_pos = _struct((), jnp.int32)
+    if rules is not None:
+        csh, ksh = state_shardings(rules, cfg, state_shapes)
+        caches = jax.tree.map(
+            lambda l, s: _struct(l.shape, l.dtype, s), state_shapes[0], csh
+        )
+        kv_len = _struct((B,), jnp.int32, ksh)
+        tok_sh = input_shardings(rules, cfg, {"t": tokens})["t"]
+        tokens = _struct((B, 1), jnp.int32, tok_sh)
+        state_shapes = (caches, kv_len)
+    return (state_shapes, tokens, cache_pos)

@@ -1,0 +1,194 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms, reported in seconds per step (TPU v5e constants):
+
+    compute    = HLO_FLOPs          / (chips * 197e12)
+    memory     = HLO_bytes_accessed / (chips * 819e9)
+    collective = collective_bytes   / (chips * 50e9)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO (``compiled.as_text()``)
+and sum *operand* bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, reconstructing operand size from the result
+shape and the replica-group size where they differ (all-gather).
+
+Also reported: MODEL_FLOPS (6·N_active·tokens for training, 2·N_active·tokens
+for inference) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs, which
+catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch.mesh import HardwareSpec, TPU_V5E
+from repro.models.config import ArchConfig, ShapeConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+# result-type block at line start: "f32[1,2]{1,0}" or "(bf16[..], f32[..])"
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    """Replica-group size from either list or iota format."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota: [ngroups,size]
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Per-op collective records from post-SPMD HLO text."""
+    out = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match " = <result types> <op-name>(" with op in our set
+        m = re.search(r"=\s+(\(?[\w\[\],{}\s/]*?)\s*((?:all|reduce|collective)[\w-]*)\(", s)
+        if not m or m.group(2) not in _COLLECTIVES:
+            continue
+        op = m.group(2)
+        if "-start" in s.split(op)[1][:8]:
+            pass  # async start counted; matching -done has no shape cost
+        result_bytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group(1)))
+        g = _group_size(s)
+        if op == "all-gather":
+            operand_bytes = result_bytes // max(g, 1)
+        elif op == "reduce-scatter":
+            operand_bytes = result_bytes * max(g, 1)
+        else:  # all-reduce / all-to-all / collective-permute
+            operand_bytes = result_bytes
+        out.append(
+            {"op": op, "operand_bytes": operand_bytes, "result_bytes": result_bytes,
+             "group_size": g, "count": 1}
+        )
+    return out
+
+
+def collective_summary(records: List[Dict]) -> Dict[str, Dict]:
+    agg: Dict[str, Dict] = {}
+    for r in records:
+        a = agg.setdefault(r["op"], {"count": 0, "operand_bytes": 0})
+        a["count"] += 1
+        a["operand_bytes"] += r["operand_bytes"]
+    return agg
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference (D = tokens
+    processed in the step: B·S for train/prefill, B for decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens_per_step
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "prefill" else 1)
+    return 2.0 * n_active * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per-device flops * chips (total)
+    hlo_bytes: float
+    collective_bytes: float  # total operand bytes across chips
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    collectives: Dict[str, Dict]
+    xla_flops: float = 0.0  # cost_analysis reference (while bodies x1 — low)
+    xla_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak FLOP/s the step would achieve if it
+        ran exactly at the max(terms) bound: model-useful MFU upper bound."""
+        if not self.bound_s:
+            return 0.0
+        chips_peak = self.chips * TPU_V5E.peak_flops
+        return self.model_flops / (self.bound_s * chips_peak)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_ratio"] = self.useful_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict,
+    hlo_text: str,
+    cfg: ArchConfig,
+    shape_cfg: ShapeConfig,
+    hw: HardwareSpec = TPU_V5E,
+) -> RooflineReport:
+    """FLOPs / HBM bytes / collective bytes from the trip-count-aware HLO
+    walker (``hlo_analysis``) — XLA's cost_analysis() counts while bodies
+    once, undercounting scanned models by the layer count, so its numbers
+    are kept only as reference fields.  All analyzer numbers are PER DEVICE
+    on the SPMD-partitioned module; totals scale by chips."""
+    from repro.launch.hlo_analysis import HloAnalyzer
+
+    an = HloAnalyzer(hlo_text, n_devices=chips)
+    flops_dev = an.flops()
+    bytes_dev = an.hbm_bytes()
+    per_dev_collective = an.collective_bytes()
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        collective_bytes=per_dev_collective * chips,
+        compute_s=flops_dev / hw.peak_flops,
+        memory_s=bytes_dev / hw.hbm_bw,
+        collective_s=per_dev_collective / hw.ici_bw,
+        model_flops=model_flops(cfg, shape_cfg),
+        collectives=an.collective_summary(),
+        xla_flops=float(cost.get("flops", 0.0)) * chips,
+        xla_bytes=float(cost.get("bytes accessed", 0.0)) * chips,
+    )

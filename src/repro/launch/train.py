@@ -1,0 +1,90 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --smoke --steps 30
+
+On this CPU container only reduced (--smoke) configs are runnable end to
+end; full configs are exercised via the dry-run (launch/dryrun.py).  On a
+real pod this driver is launched once per host: each process feeds its
+local devices from its own DELI pipeline (rank/world partition the sample
+space), and the pjit step runs over the production mesh from launch/mesh.py.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+from repro import configs
+from repro.core import PrefetchConfig
+from repro.data import decode_tokens, make_lm_pipeline
+from repro.training.loop import Trainer, TrainerConfig
+from repro.training.optimizer import OptSettings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache", type=int, default=256)
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--world", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = configs.reduce_for_smoke(cfg)
+    elif cfg.param_count() > 1e9:
+        raise SystemExit(
+            f"{args.arch} has {cfg.param_count()/1e9:.0f}B params — full-size "
+            "training needs the pod runtime; use --smoke here, or "
+            "launch/dryrun.py to compile the full config."
+        )
+    if cfg.frontend == "frame":
+        raise SystemExit("audio encoder training uses precomputed frame "
+                         "embeds; see tests/test_arch_smoke.py for the path")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
+
+    loader, service, _ = make_lm_pipeline(
+        n_samples=max(1024, args.batch * 64),
+        seq_len=args.seq_len,
+        vocab=cfg.vocab,
+        batch_size=args.batch,
+        cache_items=args.cache,
+        rank=args.rank,
+        world=args.world,
+        policy=PrefetchConfig.fifty_fifty(args.cache),
+    )
+    trainer = Trainer(
+        cfg,
+        loader,
+        TrainerConfig(
+            seq_len=args.seq_len,
+            batch_size=args.batch,
+            checkpoint_dir=args.ckpt_dir or tempfile.mkdtemp(prefix="deli_"),
+            checkpoint_every=max(10, args.steps // 3),
+            log_every=10,
+        ),
+        decode_fn=decode_tokens,
+        settings=OptSettings.auto(cfg.param_count()),
+    )
+    if args.resume and trainer.try_restore():
+        print(f"resumed from step {trainer.step}")
+    with service:
+        metrics = trainer.train(args.steps)
+    wait = sum(m.data_wait_s for m in metrics)
+    comp = sum(m.compute_s for m in metrics)
+    print(
+        f"done: step {trainer.step} loss {metrics[-1].loss:.4f} | "
+        f"data-wait {wait:.2f}s / compute {comp:.1f}s "
+        f"({wait/(wait+comp):.1%} wait fraction)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN with TPU-native expert parallelism.
+
+Routing is top-k with capacity-based token dropping (GShard-style,
+first-come-first-served by sequence position), expressed WITHOUT the giant
+(tokens, experts, capacity) one-hot dispatch tensors: each expert *selects*
+its assigned tokens with ``lax.top_k`` over an assignment score, computes a
+dense (capacity, d_ff) FFN, and scatter-adds the result back.  All shapes
+are static => AOT-lowerable for the dry-run.
+
+Distribution: experts are sharded over the ``model`` mesh axis (EP ≡ TP for
+the FFN).  Under tensor parallelism the block input is already replicated
+across ``model``, so dispatch needs NO all-to-all at all: every shard
+locally selects the tokens routed to *its* experts, computes them, and a
+single ``psum`` over ``model`` combines expert outputs — the same collective
+a TP dense FFN would need anyway.  (This adaptation — replicated-activation
+EP instead of GPU-style all-to-all EP — is recorded in DESIGN.md §7.)
+
+Both the sharded path (shard_map) and the local path (no mesh) share
+``_expert_select_compute``, so tests can assert they agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """How model code sees the device mesh (None => single-process local)."""
+
+    mesh: object  # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+def router_probs(x_flat: jax.Array, router_w: jax.Array, top_k: int):
+    """Top-k routing with renormalized combine weights.
+
+    Returns (topk_idx (T,k) int32, topk_w (T,k) f32).
+    """
+    logits = jnp.einsum(
+        "td,de->te", x_flat, router_w, preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    return topk_idx, topk_w
+
+
+def _expert_weight(topk_idx, topk_w, e: jax.Array, n_experts: int):
+    """Combine weight of expert ``e`` for every token (0 if not routed)."""
+    sel = (topk_idx == e).astype(topk_w.dtype)  # (T, k)
+    return (topk_w * sel).sum(-1)  # (T,)
+
+
+def _expert_select_compute(
+    x_flat: jax.Array,  # (T, d)
+    weight: jax.Array,  # (T,) combine weight for this expert (0 = unrouted)
+    w_gate: jax.Array,  # (d, f)
+    w_up: jax.Array,
+    w_down: jax.Array,  # (f, d)
+    capacity: int,
+    act: str,
+) -> jax.Array:
+    """One expert: select (<= capacity) assigned tokens, FFN, scatter back."""
+    T, d = x_flat.shape
+    assigned = weight > 0
+    # Earlier tokens win capacity (GShard FCFS). Score: T-pos for assigned,
+    # -1 for unassigned — top_k picks assigned tokens in position order.
+    score = jnp.where(assigned, T - jnp.arange(T, dtype=jnp.int32), -1)
+    top_scores, idx = jax.lax.top_k(score, min(capacity, T))
+    valid = (top_scores > 0).astype(jnp.float32)  # (C,)
+    xsel = x_flat[idx]  # (C, d)
+    g = jnp.einsum("cd,df->cf", xsel, w_gate, preferred_element_type=jnp.float32)
+    if act == "swiglu":
+        u = jnp.einsum("cd,df->cf", xsel, w_up, preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g)
+    y = jnp.einsum(
+        "cf,fd->cd", h.astype(x_flat.dtype), w_down, preferred_element_type=jnp.float32
+    )
+    scale = (weight[idx] * valid)[:, None]  # zero out invalid slots
+    out = jnp.zeros((T, d), jnp.float32).at[idx].add(y * scale)
+    return out
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig, capacity_factor: Optional[float]) -> int:
+    f = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    return max(1, int(n_tokens * cfg.top_k / cfg.n_experts * f))
+
+
+def _moe_local(params, x_flat, cfg: ArchConfig, capacity: int, n_local: int, e0):
+    """Compute ``n_local`` experts starting at id ``e0`` over local tokens."""
+    topk_idx, topk_w = router_probs(x_flat, params["router"], cfg.top_k)
+
+    def one_expert(i, acc):
+        e = e0 + i
+        w = _expert_weight(topk_idx, topk_w, e, cfg.n_experts)
+        out = _expert_select_compute(
+            x_flat,
+            w,
+            params["w_gate"][i],
+            params["w_up"][i] if cfg.mlp_act == "swiglu" else params["w_gate"][i],
+            params["w_down"][i],
+            capacity,
+            cfg.mlp_act,
+        )
+        return acc + out
+
+    acc0 = jnp.zeros(x_flat.shape, jnp.float32)
+    return jax.lax.fori_loop(0, n_local, one_expert, acc0)
+
+
+def moe_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    ctx: Optional[MeshContext] = None,
+    capacity_factor: Optional[float] = None,
+) -> jax.Array:
+    """MoE FFN. params: router (d,E), w_gate/w_up (E,d,f), w_down (E,f,d)."""
+    B, S, d = x.shape
+    dt = x.dtype
+
+    if ctx is None or ctx.model_size == 1:
+        x_flat = x.reshape(B * S, d)
+        cap = _capacity(B * S, cfg, capacity_factor)
+        y = _moe_local(params, x_flat, cfg, cap, cfg.n_experts, 0)
+        return y.astype(dt).reshape(B, S, d)
+
+    if cfg.n_experts % ctx.model_size != 0:
+        raise ValueError(
+            f"n_experts={cfg.n_experts} not divisible by model axis {ctx.model_size}"
+        )
+    n_local = cfg.n_experts // ctx.model_size
+    bd = P(ctx.batch_axes, None, None)
+    ma = ctx.model_axis
+
+    def sharded(x_loc, router_w, w_gate, w_up, w_down):
+        # x_loc: (B_loc, S, d) — replicated over `model`; experts sharded.
+        Bl, Sl, dl = x_loc.shape
+        x_flat = x_loc.reshape(Bl * Sl, dl)
+        cap = _capacity(Bl * Sl, cfg, capacity_factor)
+        e0 = jax.lax.axis_index(ma) * n_local
+        p_loc = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+        y = _moe_local(p_loc, x_flat, cfg, cap, n_local, e0)
+        # Combine expert outputs in the model dtype: each shard's partial sum
+        # is already an f32 accumulation; the cross-shard psum carries bf16
+        # (halves the per-layer combine collective — grad-compression-style).
+        y = jax.lax.psum(y.astype(dt), ma)
+        return y.reshape(Bl, Sl, dl)
+
+    w_up = params["w_up"] if cfg.mlp_act == "swiglu" else params["w_gate"]
+    y = jax.shard_map(
+        sharded,
+        mesh=ctx.mesh,
+        in_specs=(bd, P(None, None), P(ma, None, None), P(ma, None, None), P(ma, None, None)),
+        out_specs=bd,
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], w_up, params["w_down"])
+    return y.astype(dt)
+
+
+def moe_param_shapes(cfg: ArchConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    shapes = {"router": (d, E), "w_gate": (E, d, f), "w_down": (E, f, d)}
+    if cfg.mlp_act == "swiglu":
+        shapes["w_up"] = (E, d, f)
+    return shapes
+
+
+def moe_reference(params: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Oracle: dense all-experts compute, exact top-k combine, NO capacity
+    limit.  moe_block converges to this as capacity_factor -> inf."""
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d).astype(jnp.float32)
+    topk_idx, topk_w = router_probs(x_flat, params["router"], cfg.top_k)
+    y = jnp.zeros_like(x_flat)
+    for e in range(cfg.n_experts):
+        g = x_flat @ params["w_gate"][e].astype(jnp.float32)
+        if cfg.mlp_act == "swiglu":
+            u = x_flat @ params["w_up"][e].astype(jnp.float32)
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(g)
+        out = h @ params["w_down"][e].astype(jnp.float32)
+        w = (topk_w * (topk_idx == e)).sum(-1)
+        y = y + out * w[:, None]
+    return y.astype(x.dtype).reshape(B, S, d)

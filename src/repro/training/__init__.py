@@ -1,0 +1,6 @@
+from repro.training.optimizer import (
+    OptSettings,
+    adamw_init,
+    adamw_update,
+    opt_state_shapes,
+)

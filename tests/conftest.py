@@ -1,0 +1,28 @@
+"""Shared fixtures for the DELI-JAX test suite.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device.  Only
+``launch/dryrun.py`` (and tests that exec it as a subprocess) use the
+512-device placeholder mesh.
+"""
+import os
+import sys
+
+# Make `src/` importable regardless of how pytest is invoked.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def tmp_store_dir(tmp_path):
+    return str(tmp_path / "store")
+
+
+@pytest.fixture
+def payloads_1k():
+    from repro.core import make_synthetic_payloads
+
+    return make_synthetic_payloads(n=256, sample_bytes=1024, seed=7)

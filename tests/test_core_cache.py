@@ -1,0 +1,147 @@
+"""Unit + property tests for the capped FIFO cache (paper §IV-B semantics)."""
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CappedCache
+
+
+def test_put_get_roundtrip():
+    c = CappedCache(max_items=4)
+    assert c.put(1, b"one")
+    assert c.get(1) == b"one"
+    assert c.get(2) is None
+    assert c.stats.hits == 1 and c.stats.misses == 1
+
+
+def test_put_is_idempotent_and_preserves_fifo_order():
+    c = CappedCache(max_items=2)
+    c.put(1, b"a")
+    c.put(2, b"b")
+    c.put(1, b"a2")  # no refresh: FIFO order is insertion order
+    c.put(3, b"c")  # evicts 1 (oldest), not 2
+    assert c.get(1) is None
+    assert c.get(2) == b"b"
+    assert c.get(3) == b"c"
+
+
+def test_fifo_eviction_order():
+    c = CappedCache(max_items=3)
+    for i in range(6):
+        c.put(i, bytes([i]))
+    assert c.keys() == [3, 4, 5]
+    assert c.stats.evictions == 3
+
+
+def test_byte_capacity():
+    c = CappedCache(max_bytes=10)
+    c.put(1, b"aaaa")  # 4
+    c.put(2, b"bbbb")  # 8
+    c.put(3, b"cccc")  # 12 -> evict 1
+    assert c.get(1) is None and c.get(2) is not None
+    assert c.total_bytes == 8
+
+
+def test_unlimited_cache_never_evicts():
+    c = CappedCache()
+    for i in range(1000):
+        c.put(i, b"x")
+    assert len(c) == 1000 and c.stats.evictions == 0
+
+
+def test_session_isolation():
+    """Stale entries from a previous session never hit (multi-key index)."""
+    c1 = CappedCache(session="run-1")
+    c1.put(1, b"old")
+    c2 = CappedCache(session="run-2")
+    assert c2.get(1) is None
+
+
+def test_spill_tier_roundtrip(tmp_path):
+    c = CappedCache(max_items=8, ram_items=2, spill_dir=str(tmp_path / "spill"))
+    for i in range(6):
+        c.put(i, bytes([i]) * 32)
+    # Oldest 4 spilled to disk, newest 2 in RAM.
+    assert c.get(0) == bytes([0]) * 32  # disk-tier hit
+    assert c.stats.disk_hits >= 1
+    assert c.get(5) == bytes([5]) * 32  # ram-tier hit
+    assert c.stats.ram_hits >= 1
+
+
+def test_spilled_entries_removed_on_eviction(tmp_path):
+    spill = tmp_path / "spill"
+    c = CappedCache(max_items=2, ram_items=1, spill_dir=str(spill))
+    for i in range(5):
+        c.put(i, b"pay")
+    files = list(spill.glob("*.bin"))
+    assert len(files) <= 2
+
+
+def test_invalid_capacities():
+    with pytest.raises(ValueError):
+        CappedCache(max_items=0)
+    with pytest.raises(ValueError):
+        CappedCache(max_bytes=-1)
+
+
+def test_thread_safety_under_concurrent_put_get():
+    c = CappedCache(max_items=64)
+    errors = []
+
+    def writer(base):
+        try:
+            for i in range(200):
+                c.put(base + i, b"p" * 16)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            for i in range(400):
+                c.get(i % 256)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(k * 200,)) for k in range(4)]
+    threads += [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(c) <= 64
+
+
+@given(
+    cap=st.integers(min_value=1, max_value=50),
+    ops=st.lists(st.integers(min_value=0, max_value=99), min_size=1, max_size=300),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_capacity_and_membership(cap, ops):
+    """Invariants: size <= cap; contents match a reference FIFO simulation
+    (re-inserting a currently-resident key is a no-op; re-inserting an
+    evicted key is a fresh insert at the back)."""
+    c = CappedCache(max_items=cap)
+    model = []  # reference FIFO of resident keys
+    for idx in ops:
+        if idx not in model:
+            model.append(idx)
+            if len(model) > cap:
+                model.pop(0)
+        c.put(idx, b"x")
+    assert len(c) <= cap
+    assert c.keys() == model
+
+
+@given(
+    cap_bytes=st.integers(min_value=8, max_value=200),
+    sizes=st.lists(st.integers(min_value=1, max_value=64), min_size=1, max_size=100),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_byte_budget_respected(cap_bytes, sizes):
+    c = CappedCache(max_bytes=cap_bytes)
+    for i, s in enumerate(sizes):
+        c.put(i, b"z" * s)
+        assert c.total_bytes <= max(cap_bytes, s)  # a single over-size entry evicts to itself

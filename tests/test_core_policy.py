@@ -1,0 +1,106 @@
+"""Property tests for the pre-fetch planner — the paper's §III-B semantics."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import PrefetchConfig, PrefetchPlanner, validate_config_against_cache
+from repro.core.policy import expected_rounds
+
+
+def test_fifty_fifty_construction():
+    cfg = PrefetchConfig.fifty_fifty(2048)
+    assert cfg.fetch_size == 1024 and cfg.prefetch_threshold == 1024
+    assert cfg.cache_items == 2048
+
+
+def test_full_fetch_construction():
+    cfg = PrefetchConfig.full_fetch(1024)
+    assert cfg.fetch_size == 1024 and cfg.prefetch_threshold == 0
+    assert cfg.cache_items == 1024
+
+
+def test_invalid_configs():
+    with pytest.raises(ValueError):
+        PrefetchConfig(fetch_size=0)
+    with pytest.raises(ValueError):
+        PrefetchConfig(fetch_size=4, prefetch_threshold=-1)
+    with pytest.raises(ValueError):
+        PrefetchConfig.fifty_fifty(1)
+
+
+def test_threshold_zero_fetches_only_on_depletion():
+    """Paper default: a new round only when the queue is depleted."""
+    order = list(range(10))
+    planner = PrefetchPlanner(order, PrefetchConfig(fetch_size=4, prefetch_threshold=0))
+    rounds_at = [i for i, (_, r) in enumerate(planner) if r is not None]
+    # Rounds at consumption steps 0, 4, 8 (exactly when pending hits 0).
+    assert rounds_at == [0, 4, 8]
+
+
+def test_threshold_prefetches_early():
+    order = list(range(12))
+    planner = PrefetchPlanner(order, PrefetchConfig(fetch_size=4, prefetch_threshold=2))
+    events = list(planner)
+    rounds_at = [i for i, (_, r) in enumerate(events) if r is not None]
+    # First round at 0; pending drops to 2 after consuming 2 of 4 -> round at
+    # step 2 (announced before consuming the trigger sample), then every 4.
+    assert rounds_at[0] == 0
+    assert all(b - a == 4 for a, b in zip(rounds_at[1:], rounds_at[2:]))
+
+
+def test_disabled_planner_announces_nothing():
+    planner = PrefetchPlanner(list(range(5)), PrefetchConfig.disabled())
+    events = list(planner)
+    assert [i for i, _ in events] == list(range(5))
+    assert all(r is None for _, r in events)
+
+
+@given(
+    n=st.integers(min_value=0, max_value=400),
+    fetch=st.integers(min_value=1, max_value=64),
+    threshold=st.integers(min_value=0, max_value=64),
+)
+@settings(max_examples=120, deadline=None)
+def test_property_planner_invariants(n, fetch, threshold):
+    order = list(range(n))
+    cfg = PrefetchConfig(fetch_size=fetch, prefetch_threshold=threshold)
+    planner = PrefetchPlanner(order, cfg)
+    consumed = []
+    announced = []
+    announced_set = set()
+    for idx, round_ in planner:
+        if round_ is not None:
+            assert 1 <= len(round_) <= fetch
+            announced.extend(round_)
+            announced_set.update(round_)
+        # An index must be announced before (or at) its consumption step.
+        assert idx in announced_set
+        consumed.append(idx)
+    # Every index consumed exactly once, in order.
+    assert consumed == order
+    # Every index announced exactly once, in order, no over-announcement.
+    assert announced == order
+    if n:
+        assert planner.rounds_issued == expected_rounds(n, cfg)
+
+
+@given(n=st.integers(min_value=1, max_value=300), fetch=st.integers(min_value=1, max_value=50))
+@settings(max_examples=60, deadline=None)
+def test_property_expected_rounds_matches_ceil(n, fetch):
+    cfg = PrefetchConfig(fetch_size=fetch)
+    assert expected_rounds(n, cfg) == -(-n // fetch)
+
+
+def test_config_lints():
+    # cache smaller than fetch: the Fig. 7 pathological regime.
+    w = validate_config_against_cache(
+        PrefetchConfig(fetch_size=100, prefetch_threshold=0, cache_items=10)
+    )
+    assert any("evict each other" in x for x in w)
+    # 50/50 is clean.
+    assert validate_config_against_cache(PrefetchConfig.fifty_fifty(2048)) == []
+    # oversized cache wastes space.
+    w = validate_config_against_cache(
+        PrefetchConfig(fetch_size=10, prefetch_threshold=5, cache_items=1000)
+    )
+    assert any("does not reduce miss rate" in x for x in w)

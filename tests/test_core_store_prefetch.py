@@ -1,0 +1,185 @@
+"""Stores, pre-fetch service and the threaded DeliLoader end-to-end."""
+import pytest
+
+from repro.core import (
+    CachingDataset,
+    CappedCache,
+    DeliLoader,
+    DistributedPartitionSampler,
+    FileSystemStore,
+    InMemoryStore,
+    ListingCache,
+    PrefetchConfig,
+    PrefetchService,
+    RealClock,
+    ReliableStore,
+    SequentialSampler,
+    SimulatedBucketStore,
+    StoreError,
+    make_synthetic_payloads,
+    run_epochs,
+)
+
+FAST = RealClock(scale=1e-4)  # simulated I/O durations shrunk 10^4x
+
+
+def test_in_memory_store(payloads_1k):
+    s = InMemoryStore(payloads_1k)
+    assert s.get(0) == payloads_1k[0]
+    assert s.size_of(3) == 1024
+    assert s.list_objects() == sorted(payloads_1k)
+    assert s.stats.class_b_requests == 1
+    assert s.stats.class_a_requests == 1
+    with pytest.raises(StoreError):
+        s.get(10_000)
+
+
+def test_filesystem_store_roundtrip(tmp_store_dir, payloads_1k):
+    s = FileSystemStore.write_dataset(tmp_store_dir, payloads_1k)
+    assert s.get(5) == payloads_1k[5]
+    assert set(s.list_objects()) == set(payloads_1k)
+    assert s.size_of(7) == 1024
+
+
+def test_simulated_bucket_timing_accounting(payloads_1k):
+    s = SimulatedBucketStore(payloads_1k, clock=FAST)
+    s.get(0)
+    assert s.stats.class_b_requests == 1
+    assert s.stats.read_seconds > 0
+    s.bulk_get([1, 2, 3], n_connections=4)
+    assert s.stats.class_b_requests == 4
+    s.list_objects()
+    assert s.stats.class_a_requests >= 1
+
+
+def test_bulk_get_faster_than_sequential(payloads_1k):
+    s = SimulatedBucketStore(payloads_1k, clock=FAST)
+    seq = sum(s.model.get_seconds(1024) for _ in range(16))
+    par = s.model.bulk_get_seconds([1024] * 16, n_connections=16)
+    assert par < seq / 4  # calibrated ~5.66x parallel efficiency
+
+
+def test_reliable_store_retries(payloads_1k):
+    flaky = SimulatedBucketStore(payloads_1k, clock=FAST, failure_rate=0.5, seed=1)
+    rel = ReliableStore(flaky, max_attempts=50, base_backoff_s=1e-6, clock=FAST)
+    for i in range(32):
+        assert rel.get(i) == payloads_1k[i]
+    assert rel.retries > 0
+
+
+def test_reliable_store_gives_up():
+    always_fail = SimulatedBucketStore({0: b"x"}, clock=FAST, failure_rate=1.0)
+    rel = ReliableStore(always_fail, max_attempts=3, base_backoff_s=1e-6, clock=FAST)
+    with pytest.raises(StoreError, match="after 3 attempts"):
+        rel.get(0)
+
+
+def test_caching_dataset_hit_miss_paths(payloads_1k):
+    store = InMemoryStore(payloads_1k)
+    cache = CappedCache(max_items=8)
+    ds = CachingDataset(store, cache, insert_on_miss=True)
+    r = ds.get(1)
+    assert not r.hit
+    r = ds.get(1)
+    assert r.hit
+    assert ds.hits == 1 and ds.misses == 1
+
+
+def test_caching_dataset_no_insert_when_prefetcher_owns_population(payloads_1k):
+    store = InMemoryStore(payloads_1k)
+    cache = CappedCache(max_items=8)
+    ds = CachingDataset(store, cache, insert_on_miss=False)
+    ds.get(1)
+    assert not cache.contains(1)  # §IV-C: the worker does not insert
+
+
+def test_prefetch_service_populates_cache(payloads_1k):
+    store = SimulatedBucketStore(payloads_1k, clock=FAST)
+    cache = CappedCache(max_items=64)
+    with PrefetchService(store, cache, clock=FAST) as svc:
+        svc.request(list(range(32)))
+        assert svc.drain(timeout=30)
+    assert all(cache.contains(i) for i in range(32))
+    assert svc.rounds_completed == 1
+    assert svc.samples_fetched == 32
+
+
+def test_prefetch_service_skips_already_cached(payloads_1k):
+    store = SimulatedBucketStore(payloads_1k, clock=FAST)
+    cache = CappedCache(max_items=64)
+    cache.put(0, payloads_1k[0])
+    with PrefetchService(store, cache, clock=FAST) as svc:
+        svc.request([0, 1])
+        svc.drain(timeout=30)
+    assert store.stats.class_b_requests == 1  # only object 1 fetched
+
+
+def test_listing_cache_collapses_class_a(payloads_1k):
+    store = SimulatedBucketStore(payloads_1k, clock=FAST)
+    lc = ListingCache(clock=FAST)
+    for _ in range(5):
+        lc.list(store)
+    assert lc.lists_issued == 1
+    assert lc.lists_served_from_cache == 4
+    assert store.stats.class_a_requests == 1
+
+
+def _make_loader(payloads, cfg, world=1, rank=0, batch=16):
+    store = SimulatedBucketStore(payloads, clock=FAST)
+    cache = CappedCache(max_items=cfg.cache_items) if cfg.cache_items else CappedCache()
+    svc = PrefetchService(store, cache, clock=FAST).start() if cfg.enabled else None
+    ds = CachingDataset(store, cache, insert_on_miss=not cfg.enabled)
+    sampler = DistributedPartitionSampler(len(payloads), rank, world, seed=0)
+    return DeliLoader(ds, sampler, batch, cfg, service=svc, clock=FAST), svc
+
+
+def test_loader_end_to_end_with_prefetch(payloads_1k):
+    cfg = PrefetchConfig.fifty_fifty(128)
+    loader, svc = _make_loader(payloads_1k, cfg)
+    stats = run_epochs(loader, epochs=2)
+    svc.close()
+    assert [s.epoch for s in stats] == [0, 1]
+    assert all(s.samples == 256 for s in stats)
+    # With prefetching most accesses should be hits even in epoch 1.
+    assert stats[0].miss_rate < 0.8
+    assert stats[0].hits + stats[0].misses == stats[0].samples
+
+
+def test_loader_batches_and_len(payloads_1k):
+    cfg = PrefetchConfig.disabled()
+    loader, _ = _make_loader(payloads_1k, cfg, batch=32)
+    loader.set_epoch(0)
+    batches = list(loader)
+    assert len(batches) == len(loader) == 8
+    assert all(len(b.indices) == 32 for b in batches)
+    seen = [i for b in batches for i in b.indices]
+    assert sorted(seen) == sorted(payloads_1k)
+
+
+def test_loader_payload_integrity(payloads_1k):
+    """Samples coming through cache+prefetch are byte-identical to source."""
+    cfg = PrefetchConfig.fifty_fifty(64)
+    loader, svc = _make_loader(payloads_1k, cfg)
+    loader.set_epoch(0)
+    for b in loader:
+        for idx, payload in zip(b.indices, b.payloads):
+            assert payload == payloads_1k[idx]
+    svc.close()
+
+
+def test_loader_checkpoint_resume(payloads_1k):
+    """Mid-epoch resume yields exactly the not-yet-consumed remainder."""
+    cfg = PrefetchConfig.disabled()
+    loader, _ = _make_loader(payloads_1k, cfg, batch=16)
+    loader.set_epoch(0)
+    it = iter(loader)
+    first = [next(it) for _ in range(4)]
+    state = loader.state_dict()
+    assert state == {"epoch": 0, "cursor": 64}
+    # New loader (fresh process) restores and finishes the epoch.
+    loader2, _ = _make_loader(payloads_1k, cfg, batch=16)
+    loader2.load_state_dict(state)
+    rest = list(loader2)
+    consumed = [i for b in first + rest for i in b.indices]
+    assert sorted(consumed) == sorted(payloads_1k)
+    assert len(consumed) == len(set(consumed))

@@ -1,0 +1,48 @@
+"""Super-sample packing (beyond-paper §VI) round-trips and grouped sampling."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    GroupedPartitionSampler,
+    build_supersample_store_payloads,
+    make_synthetic_payloads,
+    pack_supersample,
+    unpack_supersample,
+)
+
+
+@given(st.lists(st.binary(min_size=0, max_size=200), min_size=0, max_size=30))
+@settings(max_examples=80, deadline=None)
+def test_property_pack_unpack_roundtrip(payloads):
+    assert unpack_supersample(pack_supersample(payloads)) == payloads
+
+
+def test_unpack_rejects_trailing_garbage():
+    blob = pack_supersample([b"ab", b"c"]) + b"junk"
+    with pytest.raises(ValueError):
+        unpack_supersample(blob)
+
+
+def test_build_store_payloads_mapping():
+    payloads = make_synthetic_payloads(10, 64)
+    groups, mapping = build_supersample_store_payloads(payloads, group_size=4)
+    assert set(groups) == {0, 1, 2}  # 4+4+2
+    for i in range(10):
+        g, off = mapping[i]
+        assert unpack_supersample(groups[g])[off] == payloads[i]
+
+
+def test_group_size_validation():
+    with pytest.raises(ValueError):
+        build_supersample_store_payloads({0: b"x"}, group_size=0)
+
+
+def test_grouped_sampler_partitions_groups():
+    world = 3
+    samplers = [GroupedPartitionSampler(30, r, world, seed=4) for r in range(world)]
+    for s in samplers:
+        s.set_epoch(1)
+    parts = [set(s.indices()) for s in samplers]
+    flat = set().union(*parts)
+    assert len(flat) == 30 and all(len(p) == 10 for p in parts)

@@ -1,0 +1,80 @@
+"""Unit tests for the trip-count-aware HLO analyzer on a hand-written
+module: loop multiplication, dot FLOPs, window-based HBM traffic, and
+collective operand accounting."""
+from repro.launch.hlo_analysis import HloAnalyzer
+
+HLO = """
+HloModule jit_step, is_scheduled=true
+
+%loop_cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%ew_only (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  ROOT %t = f32[8,16] tanh(%a)
+}
+
+%loop_body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] parameter(1)
+  %d = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%ew_only
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+ENTRY %main (x: f32[8,16], w: f32[16,16], big: f32[100,8,16]) -> f32[8,16] {
+  %x = f32[8,16] parameter(0)
+  %w = f32[16,16] parameter(1)
+  %big = f32[100,8,16] parameter(2)
+  %zero = s32[] constant(0)
+  %sl = f32[1,8,16] dynamic-slice(%big, %zero, %zero, %zero), dynamic_slice_sizes={1,8,16}
+  %ew = f32[8,16] fusion(%x), kind=kLoop, calls=%ew_only
+  %init = (s32[], f32[8,16]) tuple(%zero, %ew)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%loop_cond, body=%loop_body
+  ROOT %r = f32[8,16] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_trip_count_from_condition_constant():
+    a = HloAnalyzer(HLO, n_devices=256)
+    a.collective_bytes()
+    assert a.loop_trips == {"loop": 24}
+
+
+def test_dot_flops_multiplied_by_trips():
+    a = HloAnalyzer(HLO, n_devices=256)
+    # dot: 2*M*N*K = 2*8*16*16 = 4096 per iter, x24 iters; plus tanh 128/iter
+    # elementwise + entry fusion tanh 128
+    f = a.flops()
+    assert f >= 24 * 4096
+    assert f <= 24 * 4096 + 24 * 200 + 200
+
+
+def test_collectives_counted_per_iteration():
+    a = HloAnalyzer(HLO, n_devices=256)
+    a.collective_bytes()
+    summary = a.collective_summary()
+    assert summary["all-reduce"]["count"] == 24
+    assert summary["all-reduce"]["operand_bytes"] == 24 * 8 * 16 * 4
+
+
+def test_window_traffic_not_buffer_traffic():
+    a = HloAnalyzer(HLO, n_devices=256)
+    b = a.hbm_bytes()
+    # dynamic-slice must charge 2x window (2*1*8*16*4 = 1024 B), NOT the
+    # 100x larger source buffer; pure-elementwise fusion charges nothing.
+    window = 2 * 8 * 16 * 4
+    dot_per_iter = (8 * 16 + 16 * 16 + 8 * 16) * 4
+    ar_per_iter = 2 * 8 * 16 * 4
+    expected_max = window + 24 * (dot_per_iter + ar_per_iter) + 4096
+    assert b <= expected_max, b
+    assert b >= 24 * dot_per_iter

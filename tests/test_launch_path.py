@@ -1,0 +1,52 @@
+"""Launch-path integration under pytest (1 CPU device): step_for_cell +
+input_specs + jit lowering work end to end for reduced configs on a 1x1
+mesh.  (The full 512-device production meshes are exercised by
+launch/dryrun.py, which must own the process to set XLA_FLAGS first.)"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import configs
+from repro.distributed.sharding import ShardingRules, param_shardings
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import step_for_cell
+from repro.models import model as M
+from repro.models.config import ShapeConfig
+from repro.training.optimizer import OptSettings, opt_state_shapes
+
+SMALL_TRAIN = ShapeConfig("train_small", 128, 4, "train")
+SMALL_DECODE = ShapeConfig("decode_small", 128, 4, "decode")
+
+
+def _structs(shapes, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, shardings,
+    )
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "phi3.5-moe-42b-a6.6b", "mamba2-130m"])
+@pytest.mark.parametrize("shape", [SMALL_TRAIN, SMALL_DECODE])
+def test_lower_reduced_cell_on_smoke_mesh(arch, shape):
+    cfg = configs.reduce_for_smoke(configs.get(arch))
+    mesh = make_smoke_mesh(1, 1)
+    rules = ShardingRules(mesh, fsdp_axes=("data",))
+    pshapes = M.param_shapes(cfg)
+    pshard = param_shardings(rules, cfg, pshapes)
+    step, takes_opt, n_micro = step_for_cell(cfg, shape, rules, microbatches=2)
+    args = list(input_specs(cfg, shape, rules))
+    if takes_opt:
+        st = OptSettings.auto(cfg.param_count())
+        oshapes = opt_state_shapes(pshapes, st)
+        oshard = {
+            "m": pshard, "v": pshard,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        args = [_structs(pshapes, pshard), _structs(oshapes, oshard)] + args
+    else:
+        args = [_structs(pshapes, pshard)] + args
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+    assert "module" in lowered.as_text()[:200] or lowered.as_text()

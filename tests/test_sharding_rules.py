@@ -1,0 +1,117 @@
+"""Sharding rules: property tests (hypothesis) for the divisibility-aware
+PartitionSpec construction, plus per-arch full-config spec validity."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_spec,
+    kv_cache_spec,
+    param_shardings,
+    ssm_state_spec,
+)
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import model as M
+
+RULES = ShardingRules(make_smoke_mesh(1, 1), fsdp_axes=("data",))
+
+
+def _mesh_sizes(rules, spec_axes):
+    n = 1
+    for a in spec_axes or ():
+        n *= rules.mesh.shape[a]
+    return n
+
+
+class FakeRules(ShardingRules):
+    """ShardingRules over a fake mesh shape dict (no devices needed)."""
+
+    def __init__(self, data, model):
+        class FakeMesh:
+            shape = {"data": data, "model": model}
+            axis_names = ("data", "model")
+
+        object.__setattr__(self, "mesh", FakeMesh())
+        object.__setattr__(self, "fsdp_axes", ("data",))
+        object.__setattr__(self, "model_axis", "model")
+        object.__setattr__(self, "fsdp_params", True)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    data=st.sampled_from([1, 2, 4, 8, 16, 32, 256]),
+    model=st.sampled_from([1, 2, 4, 8, 16]),
+    batch=st.integers(1, 512),
+    seq=st.sampled_from([1, 128, 4096, 32768, 524288]),
+    kv=st.sampled_from([1, 2, 7, 8, 16, 24, 56]),
+)
+def test_kv_cache_spec_every_axis_divides(data, model, batch, seq, kv):
+    """Every sharded dim of the KV-cache spec must be divisible by the
+    product of its assigned axis sizes, and no mesh axis may appear twice."""
+    rules = FakeRules(data, model)
+    spec = kv_cache_spec(rules, batch, seq, kv)
+    dims = (batch, seq, kv, 128)
+    seen = []
+    for dim, axes in zip(dims, spec):
+        if axes is None:
+            continue
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        seen += list(axes)
+        n = 1
+        for a in axes:
+            n *= rules.mesh.shape[a]
+        assert dim % n == 0, (dim, axes)
+    assert len(seen) == len(set(seen)), spec
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    data=st.sampled_from([1, 4, 16, 32, 256]),
+    model=st.sampled_from([1, 4, 16]),
+    batch=st.integers(1, 512),
+    heads=st.sampled_from([1, 3, 24, 64, 128, 256]),
+)
+def test_ssm_state_spec_every_axis_divides(data, model, batch, heads):
+    rules = FakeRules(data, model)
+    spec = ssm_state_spec(rules, batch, heads)
+    dims = (batch, heads, 64, 128)
+    seen = []
+    for dim, axes in zip(dims, spec):
+        if axes is None:
+            continue
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        seen += list(axes)
+        n = 1
+        for a in axes:
+            n *= rules.mesh.shape[a]
+        assert dim % n == 0, (dim, axes)
+    assert len(seen) == len(set(seen)), spec
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_specs_divide_for_all_archs(arch):
+    """For every full-size arch: every sharded param dim divides by its
+    assigned axes on the production mesh shape (16 x 16)."""
+    cfg = configs.get(arch)
+    rules = FakeRules(16, 16)
+    shapes = M.param_shapes(cfg)
+
+    # param_shardings builds NamedShardings (needs a real mesh) — use the
+    # internal spec function instead.
+    from repro.distributed.sharding import _leaf_spec, _tree_paths
+
+    for path, leaf in _tree_paths(shapes):
+        spec = _leaf_spec(rules, cfg, path, leaf)
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in axes:
+                n *= rules.mesh.shape[a]
+            assert dim % n == 0, (arch, path, dim, axes)
