@@ -22,6 +22,7 @@ MODULES = [
     "fig7_cache_vs_fetch",
     "fig8_thresholds",
     "fig9_best_settings",
+    "fig10_peer_cache",
     "table2_cost",
     "beyond_paper",
     "roofline_report",

@@ -12,9 +12,11 @@ Public API:
 from repro.core.bandwidth import (
     DEFAULT_BUCKET,
     DEFAULT_DISK,
+    DEFAULT_NETWORK,
     DEFAULT_PIPELINE,
     BucketModel,
     DiskModel,
+    NetworkModel,
     PipelineCostModel,
 )
 from repro.core.cache import CappedCache
@@ -25,6 +27,7 @@ from repro.core.cost import (
     cost_bucket,
     cost_disk_baseline,
     cost_with_listing_cache,
+    cost_with_peer_cache,
     cost_with_supersamples,
 )
 from repro.core.dataset import CachingDataset

@@ -90,6 +90,32 @@ class DiskModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Inter-node (intra-cluster) network model for the cooperative peer
+    cache tier (Hoard/NoPFS direction: nodes serve each other's misses).
+
+    Defaults model the GCE VM-to-VM path in one zone: ~0.2 ms RTT and a
+    ~10 Gbit/s per-flow ceiling.  For MNIST-sized samples the round trip
+    dominates (~0.2 ms vs ~15.7 ms for a bucket GET) — a peer hit is two
+    orders of magnitude cheaper than the Class B fallback, which is the
+    entire premise of the tier.
+    """
+
+    rtt_s: float = 0.2e-3  # request/response round trip, same-zone VMs
+    bw: float = 1.25e9  # bytes/s (~10 Gbit/s per flow)
+
+    def transfer_seconds(self, size_bytes: int) -> float:
+        """Duration of fetching one object from a peer's cache."""
+        return self.rtt_s + size_bytes / self.bw
+
+    def lookup_seconds(self) -> float:
+        """A metadata-only peer lookup that misses (half a round trip is
+        pipelined with the fallback GET; we charge the full RTT to stay
+        conservative)."""
+        return self.rtt_s
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineCostModel:
     """Per-sample CPU-side cost of the data pipeline (decode + collate).
 
@@ -108,3 +134,4 @@ class PipelineCostModel:
 DEFAULT_BUCKET = BucketModel()
 DEFAULT_DISK = DiskModel()
 DEFAULT_PIPELINE = PipelineCostModel()
+DEFAULT_NETWORK = NetworkModel()

@@ -145,20 +145,59 @@ class CappedCache:
 
     def get(self, index: int) -> Optional[bytes]:
         """Lookup; None on miss. Tracks which tier served the hit."""
+        return self.get_with_tier(index)[0]
+
+    def get_with_tier(self, index: int) -> Tuple[Optional[bytes], Optional[str]]:
+        """Lookup returning ``(payload, tier)``, tier in {"ram", "disk", None}.
+
+        The tier is reported per-call (not via a stats-counter diff) so
+        concurrent readers — the peer-cache tier reads other nodes' caches —
+        can attribute their own hits correctly.
+        """
         key = self._key(index)
         with self._lock:
             if key not in self._entries:
                 self.stats.misses += 1
-                return None
+                return None, None
             payload = self._entries[key]
             self.stats.hits += 1
             if payload is not None:
                 self.stats.ram_hits += 1
-                return payload
+                return payload, "ram"
             self.stats.disk_hits += 1
         # Disk-tier read outside the lock (payload immutable once spilled).
-        with open(self._spill_path(key), "rb") as f:
-            return f.read()
+        # Race: a concurrent insert may evict this entry and delete its spill
+        # file between the lock release and the open(); re-treat as a miss.
+        try:
+            with open(self._spill_path(key), "rb") as f:
+                return f.read(), "disk"
+        except FileNotFoundError:
+            with self._lock:
+                self.stats.hits -= 1
+                self.stats.disk_hits -= 1
+                self.stats.misses += 1
+            return None, None
+
+    def peek(self, index: int) -> Optional[bytes]:
+        """Read a payload WITHOUT touching stats (or FIFO state).
+
+        Used by the peer-cache tier when serving another node's miss, so a
+        holder's hit/miss counters keep describing its *own* workload
+        rather than folding in cross-node traffic.  Returns None on a
+        miss or when the spill file lost an eviction race.
+        """
+        key = self._key(index)
+        with self._lock:
+            if key not in self._entries:
+                return None
+            payload = self._entries[key]
+        if payload is not None:
+            return payload
+        try:
+            with open(self._spill_path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
 
     def contains(self, index: int) -> bool:
         with self._lock:

@@ -49,6 +49,10 @@ class WorkloadCostInputs:
     cached_samples: int = 0  # m_c
     fetch_size: int = 0  # f (0 = no prefetching)
     months: float = 1.0  # billing horizon for storage lines
+    # Cooperative peer-cache tier: per-epoch sample reads served from a
+    # peer node's cache — each one is a Class B GET that was never issued
+    # (beyond-paper; measured as EpochStats.peer_hits by the simulator).
+    peer_served_samples: int = 0
 
 
 def _tau(prices: GcpPrices, inp: WorkloadCostInputs) -> float:
@@ -70,14 +74,41 @@ def cost_disk_baseline(prices: GcpPrices, inp: WorkloadCostInputs) -> dict:
 
 
 def _alpha(prices: GcpPrices, inp: WorkloadCostInputs, with_prefetch: bool) -> float:
-    """Eq. (4) / Eq. (5): per-epoch request charge in 'per-10k' units."""
+    """Eq. (4) / Eq. (5): per-epoch request charge in 'per-10k' units.
+
+    ``peer_served_samples`` (beyond-paper peer-cache tier) subtracts the
+    GETs that never reached the bucket from the Class B term.
+    """
     m, n, p = inp.n_samples, inp.n_nodes, prices.page_size
     listings = n * math.ceil(m / p)
     if with_prefetch:
         if inp.fetch_size <= 0:
             raise ValueError("prefetch cost model needs fetch_size > 0")
         listings *= math.ceil(m / inp.fetch_size)  # naive per-fetch listing
-    return listings * prices.class_a_per_10k + m * prices.class_b_per_10k
+    gets = max(0, m - inp.peer_served_samples)
+    return listings * prices.class_a_per_10k + gets * prices.class_b_per_10k
+
+
+def cost_with_peer_cache(
+    prices: GcpPrices,
+    inp: WorkloadCostInputs,
+    peer_hits_per_epoch: int,
+    with_prefetch: bool = False,
+) -> dict:
+    """Beyond-paper: the cooperative peer-cache tier.
+
+    ``peer_hits_per_epoch`` is the cluster-wide count of *avoided Class B
+    GETs* per epoch: sum of ``EpochStats.peer_hits`` over nodes (the
+    simulator folds pre-fetch pulls in).  For the threaded runtime use
+    demand ``EpochStats.peer_hits`` plus ``PrefetchService.peer_fetches``
+    (winner-only) — NOT ``PeerStore.peer_hits``, which counts every
+    physical peer read including hedged duplicates that avoided no GET.
+    Intra-zone VM-to-VM traffic is free on GCP, so the entire effect is
+    avoided Class B requests; VM time changes enter through the measured
+    ``data_wait_seconds``.
+    """
+    peered = dataclasses.replace(inp, peer_served_samples=peer_hits_per_epoch)
+    return cost_bucket(prices, peered, with_prefetch=with_prefetch)
 
 
 def cost_bucket(

@@ -22,6 +22,9 @@ class AccessResult:
     payload: bytes
     hit: bool
     ram_hit: bool = False
+    # Local-cache miss served from a peer node's cache (PeerStore tier)
+    # instead of the bucket — no Class B request was issued.
+    peer_hit: bool = False
 
 
 class CachingDataset:
@@ -44,22 +47,28 @@ class CachingDataset:
 
     def get(self, index: int) -> AccessResult:
         if self.cache is not None:
-            ram_before = self.cache.stats.ram_hits
-            cached = self.cache.get(index)
+            cached, tier = self.cache.get_with_tier(index)
             if cached is not None:
                 with self._lock:
                     self.hits += 1
-                ram_hit = self.cache.stats.ram_hits > ram_before
                 payload = self.transform(cached) if self.transform else cached
-                return AccessResult(payload, hit=True, ram_hit=ram_hit)
-        payload = self.store.get(index)
+                return AccessResult(payload, hit=True, ram_hit=tier == "ram")
+        # A PeerStore exposes ``get_with_origin``: a per-call flag saying
+        # whether this miss was served by a peer instead of the bucket
+        # (per-call so concurrent prefetch workers can't misattribute it).
+        get_with_origin = getattr(self.store, "get_with_origin", None)
+        if get_with_origin is not None:
+            payload, peer_hit = get_with_origin(index)
+        else:
+            payload = self.store.get(index)
+            peer_hit = False
         with self._lock:
             self.misses += 1
         if self.cache is not None and self.insert_on_miss:
             self.cache.put(index, payload)
         if self.transform:
             payload = self.transform(payload)
-        return AccessResult(payload, hit=False)
+        return AccessResult(payload, hit=False, peer_hit=peer_hit)
 
     def __getitem__(self, index: int) -> bytes:
         return self.get(index).payload

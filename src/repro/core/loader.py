@@ -112,6 +112,8 @@ class DeliLoader:
             else:
                 stats.misses += 1
                 batch_misses += 1
+                if result.peer_hit:
+                    stats.peer_hits += 1
             batch_indices.append(idx)
             batch_payloads.append(result.payload)
             if len(batch_indices) == self.batch_size:

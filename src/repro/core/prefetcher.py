@@ -21,7 +21,12 @@ Beyond-paper behaviours:
   * ``streaming_insert=True`` inserts each object as it lands instead of at
     round completion, shaving the head-of-round miss window;
   * hedged GETs for straggler mitigation when running over a real threaded
-    store (duplicate request after ``hedge_after_s``).
+    store (duplicate request after ``hedge_after_s``);
+  * cooperative peer caching: hand the service a
+    ``repro.distributed.PeerStore`` and every per-key GET first consults
+    peers' caches (the generic thread-pool path below), so fetch rounds
+    pull cluster-resident samples over the inter-node network instead of
+    issuing Class B bucket requests for them.
 """
 from __future__ import annotations
 
@@ -60,6 +65,10 @@ class PrefetchService:
         self.hedges = 0
         self.rounds_completed = 0
         self.samples_fetched = 0
+        # Round objects pulled from a peer's cache instead of the bucket
+        # (only populated when ``store`` is a PeerStore-like object
+        # exposing ``get_with_origin``).
+        self.peer_fetches = 0
         self._queue: "queue.Queue[Optional[FetchRequest]]" = queue.Queue()
         self._request_counter = 0
         self._idle = threading.Event()
@@ -135,30 +144,44 @@ class PrefetchService:
                 self.cache.put_many(zip(keys, payloads))
         else:
             payloads_by_key = {}
+            get_with_origin = getattr(self.store, "get_with_origin", None)
+
+            def _get(k):
+                if get_with_origin is None:
+                    return self.store.get(k), False
+                return get_with_origin(k)
+
             with ThreadPoolExecutor(max_workers=self.n_connections) as pool:
-                futures = {k: pool.submit(self.store.get, k) for k in keys}
+                futures = {k: pool.submit(_get, k) for k in keys}
                 for k, fut in futures.items():
+                    # Resolve the payload (hedged or plain), THEN fall through
+                    # to a single insert point — a fast pre-deadline result
+                    # must take the same streaming-insert path as everything
+                    # else (regression: such payloads were never cached).
                     if self.hedge_after_s is not None:
                         try:
-                            payloads_by_key[k] = fut.result(timeout=self.hedge_after_s)
-                            continue
+                            payload, from_peer = fut.result(timeout=self.hedge_after_s)
                         except FutureTimeout:
                             self.hedges += 1
-                            hedge = pool.submit(self.store.get, k)
-                            winner = None
+                            hedge = pool.submit(_get, k)
+                            payload = None
                             for f in (fut, hedge):
                                 try:
-                                    winner = f.result(timeout=self.hedge_after_s * 10)
+                                    payload, from_peer = f.result(
+                                        timeout=self.hedge_after_s * 10
+                                    )
                                     break
                                 except FutureTimeout:
                                     continue
-                            if winner is None:
-                                winner = fut.result()
-                            payloads_by_key[k] = winner
+                            if payload is None:
+                                payload, from_peer = fut.result()
                     else:
-                        payloads_by_key[k] = fut.result()
+                        payload, from_peer = fut.result()
+                    if from_peer:
+                        self.peer_fetches += 1
+                    payloads_by_key[k] = payload
                     if self.streaming_insert:
-                        self.cache.put(k, payloads_by_key[k])
+                        self.cache.put(k, payload)
             if not self.streaming_insert:
                 self.cache.put_many((k, payloads_by_key[k]) for k in keys)
         if listing_thread:

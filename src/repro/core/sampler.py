@@ -114,12 +114,20 @@ class LocalityAwareSampler(Sampler):
         world: int,
         seed: int = 0,
         locality_fraction: float = 1.0,
+        peer_aware: bool = False,
     ):
         super().__init__(n_samples)
         self.rank = rank
         self.world = world
         self.seed = seed
         self.locality_fraction = locality_fraction
+        # Cooperative peer-cache tier: an index cached *anywhere* is cheap
+        # for every node (one peer RTT), only bucket-only indices pay a
+        # Class B GET.  With ``peer_aware`` the leftover fill spreads the
+        # bucket-only indices evenly across nodes (on-node > on-peer >
+        # bucket-only preference) so no node eats a disproportionate share
+        # of the expensive misses.
+        self.peer_aware = peer_aware
         self._cache_views: Optional[List[frozenset]] = None
 
     def update_cache_views(self, cached_indices_per_node: Sequence[Sequence[int]]) -> None:
@@ -157,6 +165,13 @@ class LocalityAwareSampler(Sampler):
             if not placed:
                 leftovers.append(idx)
         # Round-robin the rest into remaining quota, in permutation order.
+        # Peer-aware tiering: fill bucket-only leftovers first (max-quota
+        # greedy spreads them evenly — they are the expensive ones under a
+        # peer-cache tier), then the on-peer leftovers, which any node can
+        # serve cheaply from whoever holds them.
+        if self.peer_aware:
+            anywhere = frozenset().union(*views)
+            leftovers = sorted(leftovers, key=lambda idx: idx in anywhere)
         ranks_cycle = sorted(range(self.world), key=lambda r: -quota[r])
         for idx in leftovers:
             ranks_cycle.sort(key=lambda r: -quota[r])

@@ -25,14 +25,16 @@ Measured outputs per epoch = the paper's metrics: miss rate, data-wait.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.bandwidth import (
     DEFAULT_BUCKET,
     DEFAULT_DISK,
+    DEFAULT_NETWORK,
     DEFAULT_PIPELINE,
     BucketModel,
     DiskModel,
+    NetworkModel,
     PipelineCostModel,
 )
 from repro.core.cache import CappedCache
@@ -40,6 +42,11 @@ from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
+
+if TYPE_CHECKING:  # runtime import is deferred: repro.core is imported by
+    # repro.distributed.peer_cache, so a module-level import here would be
+    # circular for processes whose first repro import is repro.distributed.
+    from repro.distributed.peer_cache import PeerCacheRegistry
 
 _SENTINEL = b"\x00"  # cache payloads are placeholders; experiments count items
 
@@ -55,6 +62,9 @@ class SimConfig:
     streaming_insert: bool = False  # beyond-paper knob
     list_every_fetch: bool = True  # paper prototype; False = listing cache
     locality_aware: bool = False  # beyond-paper partitioner
+    # Cooperative peer-cache tier: on a local miss, ask peers' caches over
+    # the modelled inter-node network before falling back to the bucket.
+    peer_cache: bool = False
 
     def label(self) -> str:
         if self.source == "disk":
@@ -62,10 +72,11 @@ class SimConfig:
         if self.cache_items is None:
             return "gcp-direct"
         cache = "unlimited" if self.cache_items == -1 else str(self.cache_items)
+        peer = "+peer" if self.peer_cache else ""
         if self.prefetch is None:
-            return f"cache[{cache}]"
+            return f"cache[{cache}]{peer}"
         return (
-            f"cache[{cache}]+pf(f={self.prefetch.fetch_size},"
+            f"cache[{cache}]{peer}+pf(f={self.prefetch.fetch_size},"
             f"T={self.prefetch.prefetch_threshold})"
         )
 
@@ -87,12 +98,16 @@ class NodeSimulator:
         bucket: BucketModel = DEFAULT_BUCKET,
         disk: DiskModel = DEFAULT_DISK,
         pipeline: PipelineCostModel = DEFAULT_PIPELINE,
+        network: NetworkModel = DEFAULT_NETWORK,
+        node_id: int = 0,
     ):
         self.spec = spec
         self.cfg = cfg
         self.bucket = bucket
         self.disk = disk
         self.pipeline = pipeline
+        self.network = network
+        self.node_id = node_id
         self.t = 0.0
         self.store_stats = StoreStats()
         self.cache: Optional[CappedCache] = None
@@ -100,6 +115,27 @@ class NodeSimulator:
             max_items = None if cfg.cache_items == -1 else cfg.cache_items
             self.cache = CappedCache(max_items=max_items)
         self.service = _ServiceState()
+        # Cooperative peer-cache tier (set by simulate_cluster / tests).
+        self.registry: Optional["PeerCacheRegistry"] = None
+
+    def join_peer_registry(self, registry: "PeerCacheRegistry") -> None:
+        """Register this node's cache in the cluster-wide directory."""
+        if self.cache is None:
+            raise ValueError("peer cache tier needs a local cache (cache_items)")
+        registry.register(self.node_id, self.cache)
+        self.registry = registry
+
+    def _peer_fetch(self, idx: int) -> bool:
+        """Try to serve ``idx`` from a peer's cache; returns hit/miss."""
+        if self.registry is None:
+            return False
+        holder = self.registry.lookup(idx, requester=self.node_id)
+        if holder is None:
+            return False
+        if self.registry.cache_of(holder).peek(idx) is None:
+            return False  # evicted between lookup and read
+        self.registry.record_hit()
+        return True
 
     # -- store timing --------------------------------------------------------
     def _sequential_get_s(self) -> float:
@@ -111,7 +147,7 @@ class NodeSimulator:
         )
 
     # -- service -------------------------------------------------------------
-    def _issue_round(self, keys: List[int]) -> None:
+    def _issue_round(self, keys: List[int], stats: Optional[EpochStats] = None) -> None:
         start = max(self.t, self.service.free_at)
         listing_s = 0.0
         if self.cfg.list_every_fetch or self.service.rounds == 0:
@@ -119,13 +155,33 @@ class NodeSimulator:
             self.store_stats.class_a_requests += max(
                 1, -(-self.spec.n_samples // self.bucket.page_size)
             )
+        # Peer-cache tier: the pre-fetch service pulls keys a peer already
+        # holds over the inter-node network (sequential RPCs) instead of
+        # issuing bucket GETs for them — no Class B request billed.
+        bucket_keys = keys
+        peer_s = 0.0
+        if self.registry is not None:
+            bucket_keys = []
+            n_peer = 0
+            for k in keys:
+                if self._peer_fetch(k):
+                    n_peer += 1
+                else:
+                    bucket_keys.append(k)
+            # Peer hits pay the transfer (RTT + streaming); failed probes
+            # pay the lookup RTT — same charges as the demand path.
+            peer_s = n_peer * self.network.transfer_seconds(
+                self.spec.sample_bytes
+            ) + len(bucket_keys) * self.network.lookup_seconds()
+            if stats is not None:
+                stats.peer_hits += n_peer
         # The round's keys are known when it is issued, so the (naive)
         # per-round listing proceeds CONCURRENTLY with the parallel GETs —
         # it is pure Class A accounting traffic, not a serialization point.
-        dur = max(listing_s, self._bulk_get_s(len(keys)))
+        dur = max(listing_s, self._bulk_get_s(len(bucket_keys)) + peer_s)
         done = start + dur
-        self.store_stats.class_b_requests += len(keys)
-        self.store_stats.bytes_read += len(keys) * self.spec.sample_bytes
+        self.store_stats.class_b_requests += len(bucket_keys)
+        self.store_stats.bytes_read += len(bucket_keys) * self.spec.sample_bytes
         self.store_stats.read_seconds += dur
         if self.cfg.streaming_insert:
             # Spread inserts uniformly across the round duration.
@@ -167,7 +223,17 @@ class NodeSimulator:
                 wait += pipeline.ram_hit_s
                 stats.hits += 1
                 stats.ram_hits += 1
+            elif self._peer_fetch(idx):
+                # Local miss served by a peer's cache over the inter-node
+                # network: RTT + streaming, no Class B request.
+                wait += self.network.transfer_seconds(self.spec.sample_bytes)
+                stats.misses += 1
+                stats.peer_hits += 1
+                if self.cfg.prefetch is None:
+                    self.cache.put(idx, _SENTINEL)
             else:
+                if self.registry is not None:
+                    wait += self.network.lookup_seconds()  # failed peer probe
                 wait += self._sequential_get_s()
                 stats.misses += 1
                 self.store_stats.class_b_requests += 1
@@ -191,7 +257,7 @@ class NodeSimulator:
         samples_in_batch = 0
         for idx, round_ in planner:
             if round_ is not None:
-                self._issue_round(list(round_))
+                self._issue_round(list(round_), stats)
             self._access(idx, stats)
             samples_in_batch += 1
             if samples_in_batch == self.spec.batch_size:
@@ -211,15 +277,45 @@ def simulate_cluster(
     bucket: BucketModel = DEFAULT_BUCKET,
     disk: DiskModel = DEFAULT_DISK,
     pipeline: PipelineCostModel = DEFAULT_PIPELINE,
+    network: NetworkModel = DEFAULT_NETWORK,
 ) -> Tuple[List[EpochStats], StoreStats]:
     """Run all nodes of the paper's setup for N epochs; returns per-node
-    per-epoch stats + aggregate store accounting."""
-    nodes = [NodeSimulator(spec, cfg, bucket, disk, pipeline) for _ in range(spec.n_nodes)]
+    per-epoch stats + aggregate store accounting.
+
+    With ``cfg.peer_cache`` every node's cache joins one
+    ``PeerCacheRegistry``; a node's local miss is first offered to its
+    peers' caches over the modelled inter-node network.  Nodes still run
+    their epochs sequentially (as before), so a rank-r node sees ranks < r
+    at their post-current-epoch cache state and ranks > r at the previous
+    epoch boundary.  The bias is mixed relative to concurrently-running
+    nodes: same-epoch fills from lower ranks are visible early (optimistic)
+    while capped caches' same-epoch evictions are also visible early
+    (pessimistic); an event-interleaved cluster sim is a ROADMAP item.
+    """
+    nodes = [
+        NodeSimulator(spec, cfg, bucket, disk, pipeline, network, node_id=rank)
+        for rank in range(spec.n_nodes)
+    ]
+    registry: Optional["PeerCacheRegistry"] = None
+    if cfg.peer_cache:
+        from repro.distributed.peer_cache import PeerCacheRegistry
+
+        if cfg.cache_items is None:
+            raise ValueError("peer_cache requires a local cache (cache_items)")
+        registry = PeerCacheRegistry()
+        for node in nodes:
+            node.join_peer_registry(registry)
     samplers: List = []
     for rank in range(spec.n_nodes):
         if cfg.locality_aware:
             samplers.append(
-                LocalityAwareSampler(spec.n_samples, rank, spec.n_nodes, seed=seed)
+                LocalityAwareSampler(
+                    spec.n_samples,
+                    rank,
+                    spec.n_nodes,
+                    seed=seed,
+                    peer_aware=cfg.peer_cache,
+                )
             )
         else:
             samplers.append(
@@ -228,7 +324,10 @@ def simulate_cluster(
     all_stats: List[EpochStats] = []
     for e in range(epochs):
         if cfg.locality_aware:
-            views = [n.cache.keys() if n.cache else [] for n in nodes]
+            if registry is not None:
+                views = registry.cache_views()  # ordered by node id == rank
+            else:
+                views = [n.cache.keys() if n.cache else [] for n in nodes]
             for s in samplers:
                 s.update_cache_views(views)
         for rank, (node, sampler) in enumerate(zip(nodes, samplers)):

@@ -84,6 +84,15 @@ class EpochStats:
     compute_seconds: float = 0.0
     evictions: int = 0
     ram_hits: int = 0  # two-tier cache: hits served from the RAM tier
+    # Cooperative peer-cache tier: reads served by a peer node's cache over
+    # the inter-node network instead of the bucket; each one is a Class B
+    # request avoided.  Demand misses served by peers stay counted inside
+    # ``misses`` (the local cache did miss).  The simulator additionally
+    # folds pre-fetch round pulls into this field; the threaded runtime
+    # reports service-side pulls on ``PrefetchService.peer_fetches`` /
+    # ``PeerStore.peer_hits`` instead (the async service can't attribute
+    # them to an epoch).
+    peer_hits: int = 0
 
     @property
     def miss_rate(self) -> float:

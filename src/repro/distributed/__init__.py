@@ -1,7 +1,26 @@
-from repro.distributed.sharding import (
-    ShardingRules,
-    batch_spec,
-    input_shardings,
-    param_shardings,
-    state_shardings,
+"""repro.distributed — cluster-scale layers.
+
+``peer_cache`` (pure Python, no jax) is imported eagerly; the sharding
+rules pull in jax, so they are exposed lazily (PEP 562) to keep the core
+data plane importable without paying the jax import in tests/tools that
+never touch a mesh.
+"""
+from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
+
+_SHARDING_EXPORTS = (
+    "ShardingRules",
+    "batch_spec",
+    "input_shardings",
+    "param_shardings",
+    "state_shardings",
 )
+
+__all__ = ["PeerCacheRegistry", "PeerStore", *_SHARDING_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _SHARDING_EXPORTS:
+        from repro.distributed import sharding
+
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,175 @@
+"""Cooperative peer-cache tier: nodes serve each other's cache misses.
+
+The paper's DELI design caches bucket data node-locally, so every node pays
+full Class B traffic for samples its *peers* already hold.  Hoard (Pinto et
+al., 2018) showed a distributed cache tier across training nodes recovers
+most of that bandwidth; Clairvoyant Prefetching / NoPFS (Dryden et al.,
+2021) multiplies the benefit with locality-aware sample assignment.  This
+module adds that tier to both execution paths:
+
+  * ``PeerCacheRegistry`` — the cluster-wide directory: which node's
+    ``CappedCache`` to ask for a given sample index.  In this repo the
+    "network" is a ``NetworkModel`` (timing only); the registry is the
+    integration point for a real RPC transport (gRPC sidecar, NCCL
+    broadcast, ...) later.
+  * ``PeerStore`` — a ``SampleStore`` that, on a local-cache miss, first
+    asks its peers' caches over the modelled inter-node network and only
+    then falls back to the wrapped bucket store.  A peer hit costs an RTT +
+    payload/bandwidth instead of a bucket GET (no Class B request billed).
+
+Consistency note: caches are keyed by (session, index) and entries are
+immutable once inserted (payloads are content-addressed by dataset index),
+so serving a peer's copy can never return stale data — eviction races
+simply degrade to a bucket fallback.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from repro.core.bandwidth import DEFAULT_NETWORK, NetworkModel
+from repro.core.cache import CappedCache
+from repro.core.clock import Clock, RealClock
+from repro.core.store import SampleStore
+
+
+class PeerCacheRegistry:
+    """Directory of every node's cache, shared by all ``PeerStore``s.
+
+    Thread-safe: the threaded runtime registers/looks up concurrently from
+    per-node prefetch workers and training loops.  ``lookup`` returns the
+    id of a node (other than the requester) whose cache currently holds the
+    index — preferring the lowest node id for determinism — or ``None``.
+    """
+
+    def __init__(self) -> None:
+        self._caches: Dict[int, CappedCache] = {}
+        self._lock = threading.Lock()
+        self.lookups = 0
+        self.peer_hits = 0
+
+    def register(self, node: int, cache: CappedCache) -> None:
+        with self._lock:
+            if node in self._caches and self._caches[node] is not cache:
+                raise ValueError(f"node {node} already registered")
+            self._caches[node] = cache
+
+    def nodes(self) -> List[int]:
+        with self._lock:
+            return sorted(self._caches)
+
+    def cache_of(self, node: int) -> CappedCache:
+        with self._lock:
+            return self._caches[node]
+
+    def lookup(self, index: int, requester: Optional[int] = None) -> Optional[int]:
+        """Find a peer (not the requester) whose cache holds ``index``.
+
+        A positive lookup is only a *candidate*: the holder may evict the
+        entry before the payload read.  Callers confirm the hit with
+        :meth:`record_hit` once the payload is actually in hand, so
+        ``peer_hits`` never overcounts the eviction race.
+        """
+        with self._lock:
+            candidates = sorted(self._caches)
+            self.lookups += 1
+        for node in candidates:
+            if node == requester:
+                continue
+            if self._caches[node].contains(index):
+                return node
+        return None
+
+    def record_hit(self) -> None:
+        """Count one confirmed peer-served read (payload obtained)."""
+        with self._lock:
+            self.peer_hits += 1
+
+    def cache_views(self) -> List[List[int]]:
+        """Per-node cached index sets, ordered by node id (the all-gather a
+        real deployment would perform for ``LocalityAwareSampler``)."""
+        with self._lock:
+            items = sorted(self._caches.items())
+        return [cache.keys() for _, cache in items]
+
+
+class PeerStore(SampleStore):
+    """Store wrapper: peers' caches first, wrapped bucket store second.
+
+    ``get`` resolution order (the local cache itself is in front of this
+    store, inside ``CachingDataset``/``NodeSimulator``):
+
+      1. registry lookup -> peer cache ``get`` + modelled network transfer
+         (no Class B request, no bucket latency);
+      2. fallback to ``inner.get`` (the usual bucket miss path).
+
+    The eviction race (peer listed as holder, entry gone by the time we
+    read) degrades to the fallback, never to an error.
+    """
+
+    def __init__(
+        self,
+        inner: SampleStore,
+        registry: PeerCacheRegistry,
+        node: int,
+        network: NetworkModel = DEFAULT_NETWORK,
+        clock: Optional[Clock] = None,
+        charge_lookup_on_miss: bool = True,
+    ):
+        super().__init__()
+        self.inner = inner
+        self.registry = registry
+        self.node = node
+        self.network = network
+        self.clock = clock or getattr(inner, "clock", None) or RealClock()
+        self.charge_lookup_on_miss = charge_lookup_on_miss
+        self.peer_hits = 0
+        self.peer_bytes = 0
+        self.peer_seconds = 0.0
+        self._peer_lock = threading.Lock()
+
+    def get(self, index: int, **kw) -> bytes:
+        return self.get_with_origin(index, **kw)[0]
+
+    def get_with_origin(self, index: int, **kw) -> "tuple[bytes, bool]":
+        """GET returning ``(payload, served_by_peer)``.
+
+        The flag is per-call, so callers attributing hits (e.g.
+        ``CachingDataset``) stay correct when a prefetch worker and the
+        training loop share this store concurrently.
+        """
+        holder = self.registry.lookup(index, requester=self.node)
+        if holder is not None:
+            # peek(): don't pollute the holder's own hit/miss accounting.
+            payload = self.registry.cache_of(holder).peek(index)
+            if payload is not None:
+                dt = self.network.transfer_seconds(len(payload))
+                self.clock.sleep(dt)
+                with self._peer_lock:
+                    self.peer_hits += 1
+                    self.peer_bytes += len(payload)
+                    self.peer_seconds += dt
+                self.registry.record_hit()
+                return payload, True
+        if self.charge_lookup_on_miss:
+            self.clock.sleep(self.network.lookup_seconds())
+        return self.inner.get(index, **kw), False
+
+    def size_of(self, index: int) -> int:
+        return self.inner.size_of(index)
+
+    def list_objects(self) -> List[int]:
+        return self.inner.list_objects()
+
+    @property
+    def stats(self):  # type: ignore[override]
+        # Class A/B accounting lives where the requests are billed: the
+        # wrapped bucket store.  Peer traffic is tracked separately above.
+        return self.inner.stats
+
+    @stats.setter
+    def stats(self, v) -> None:
+        if hasattr(self, "inner"):
+            self.inner.stats = v
+        else:  # abc __init__ assigns before inner exists
+            self.__dict__["_pre_init_stats"] = v

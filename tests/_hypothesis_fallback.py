@@ -1,0 +1,129 @@
+"""Deterministic offline stand-in for the ``hypothesis`` API surface the
+test suite uses.
+
+This container has no network and no ``hypothesis`` wheel; rather than lose
+the five property-test modules, each ``@given`` test degrades to a fixed
+seed sweep: every strategy draws from a ``random.Random`` seeded by the
+test's qualified name, so runs are reproducible and failures are
+re-runnable.  Only the strategies the suite actually uses are implemented
+(``integers``, ``lists``, ``binary``, ``sampled_from``); anything else
+raises immediately rather than silently passing.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:  # offline container
+        from _hypothesis_fallback import given, settings
+        from _hypothesis_fallback import strategies as st
+"""
+from __future__ import annotations
+
+
+import random
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+# Cap the sweep well below hypothesis' max_examples defaults: the fallback
+# has no shrinking or coverage guidance, so extra examples buy little.
+MAX_FALLBACK_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a deterministic sampler: rng -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # aid failure messages
+        return f"st.{self.label}"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: rng.randint(min_value, max_value),
+            f"integers({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 64) -> SearchStrategy:
+        def draw(rng: random.Random) -> bytes:
+            n = rng.randint(min_size, max_size)
+            return bytes(rng.getrandbits(8) for _ in range(n))
+
+        return SearchStrategy(draw, f"binary({min_size}, {max_size})")
+
+    @staticmethod
+    def lists(
+        elements: SearchStrategy, min_size: int = 0, max_size: int = 16
+    ) -> SearchStrategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(n)]
+
+        return SearchStrategy(draw, f"lists({elements.label})")
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+        options = list(options)
+        if not options:
+            raise ValueError("sampled_from needs a non-empty sequence")
+        return SearchStrategy(lambda rng: rng.choice(options), "sampled_from")
+
+
+st = strategies
+
+
+def settings(max_examples: Optional[int] = None, deadline: Any = None, **_: Any):
+    """Records the example budget; chainable in either decorator order."""
+
+    def apply(fn: Callable) -> Callable:
+        if max_examples is not None:
+            budget = min(max_examples, MAX_FALLBACK_EXAMPLES)
+            setattr(fn, "_fallback_max_examples", budget)
+        return fn
+
+    return apply
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Expand a property test into a fixed, seeded example sweep."""
+
+    def decorate(fn: Callable) -> Callable:
+        # NOT functools.wraps: copying __wrapped__ would make pytest read the
+        # original signature and treat the drawn parameters as fixtures.
+        def sweep(*fixture_args: Any, **fixture_kwargs: Any) -> None:
+            n = getattr(sweep, "_fallback_max_examples", MAX_FALLBACK_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for example in range(n):
+                args = [s.example_from(rng) for s in arg_strategies]
+                kwargs = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+                except Exception as e:  # annotate with the failing example
+                    raise AssertionError(
+                        f"falsifying example #{example} (seed {seed}): "
+                        f"args={args!r} kwargs={kwargs!r}: {e}"
+                    ) from e
+
+        sweep.__name__ = fn.__name__
+        sweep.__qualname__ = fn.__qualname__
+        sweep.__doc__ = fn.__doc__
+        sweep.__module__ = fn.__module__
+        # A later @settings may sit above or below @given; copy any budget
+        # the wrapped fn already carries.
+        if hasattr(fn, "_fallback_max_examples"):
+            sweep._fallback_max_examples = fn._fallback_max_examples
+        return sweep
+
+    return decorate

@@ -1,7 +1,11 @@
 """Property tests for the pre-fetch planner — the paper's §III-B semantics."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import PrefetchConfig, PrefetchPlanner, validate_config_against_cache
 from repro.core.policy import expected_rounds

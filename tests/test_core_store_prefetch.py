@@ -114,6 +114,58 @@ def test_prefetch_service_skips_already_cached(payloads_1k):
     assert store.stats.class_b_requests == 1  # only object 1 fetched
 
 
+def test_prefetch_hedged_fast_results_are_cached(payloads_1k):
+    """Regression: with hedge_after_s set AND streaming_insert on, payloads
+    that resolved before the hedge deadline skipped every insert path and
+    were never cached."""
+    store = InMemoryStore(payloads_1k)  # resolves instantly => pre-deadline
+    cache = CappedCache(max_items=64)
+    with PrefetchService(
+        store, cache, clock=FAST, hedge_after_s=0.5, streaming_insert=True
+    ) as svc:
+        svc.request(list(range(16)))
+        assert svc.drain(timeout=30)
+    assert all(cache.contains(i) for i in range(16))
+    assert svc.hedges == 0
+    for i in range(16):
+        assert cache.get(i) == payloads_1k[i]
+
+
+class _SlowFirstGetStore(InMemoryStore):
+    """First GET of any key stalls; duplicates return instantly (straggler)."""
+
+    def __init__(self, payloads, stall_s):
+        super().__init__(payloads)
+        self.stall_s = stall_s
+        self._seen = set()
+        self._seen_lock = __import__("threading").Lock()
+
+    def get(self, index):
+        with self._seen_lock:
+            first = index not in self._seen
+            self._seen.add(index)
+        if first:
+            import time
+
+            time.sleep(self.stall_s)
+        return super().get(index)
+
+
+@pytest.mark.slow  # threaded, real-clock stall
+def test_prefetch_hedged_straggler_cached_exactly_once(payloads_1k):
+    store = _SlowFirstGetStore(payloads_1k, stall_s=0.3)
+    cache = CappedCache(max_items=64)
+    with PrefetchService(
+        store, cache, clock=FAST, hedge_after_s=0.02, streaming_insert=True
+    ) as svc:
+        svc.request([0, 1])
+        assert svc.drain(timeout=30)
+    assert svc.hedges == 2
+    assert cache.contains(0) and cache.contains(1)
+    assert cache.stats.inserts == 2  # exactly once per payload
+    assert cache.get(0) == payloads_1k[0]
+
+
 def test_listing_cache_collapses_class_a(payloads_1k):
     store = SimulatedBucketStore(payloads_1k, clock=FAST)
     lc = ListingCache(clock=FAST)

@@ -1,7 +1,11 @@
 """Super-sample packing (beyond-paper §VI) round-trips and grouped sampling."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import (
     GroupedPartitionSampler,

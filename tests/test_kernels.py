@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # XLA-compile-heavy; excluded from the smoke lane
+
 from repro.kernels import ops, ref
 
 _ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}

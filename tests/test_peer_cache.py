@@ -1,0 +1,275 @@
+"""Cooperative peer-cache tier: registry, PeerStore, simulator knob,
+threaded-runtime wiring, locality-aware tiering and the cost hook."""
+import pytest
+
+from repro.core import (
+    MNIST,
+    CachingDataset,
+    CappedCache,
+    DeliLoader,
+    DistributedPartitionSampler,
+    GcpPrices,
+    LocalityAwareSampler,
+    NetworkModel,
+    PrefetchConfig,
+    PrefetchService,
+    SimConfig,
+    SimulatedBucketStore,
+    VirtualClock,
+    WorkloadCostInputs,
+    cost_bucket,
+    cost_with_peer_cache,
+    make_synthetic_payloads,
+    mean_data_wait,
+    simulate_cluster,
+)
+from repro.distributed import PeerCacheRegistry, PeerStore
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+def test_registry_register_and_lookup():
+    reg = PeerCacheRegistry()
+    c0, c1 = CappedCache(), CappedCache()
+    reg.register(0, c0)
+    reg.register(1, c1)
+    c1.put(7, b"x")
+    assert reg.nodes() == [0, 1]
+    assert reg.lookup(7, requester=0) == 1
+    assert reg.lookup(7, requester=1) is None  # never your own cache
+    assert reg.lookup(8, requester=0) is None
+    assert reg.cache_views() == [[], [7]]
+    # Lookups are candidates only; hits are confirmed by the reader.
+    assert reg.lookups == 3 and reg.peer_hits == 0
+    reg.record_hit()
+    assert reg.peer_hits == 1
+
+
+def test_registry_rejects_double_registration():
+    reg = PeerCacheRegistry()
+    reg.register(0, CappedCache())
+    reg.register(0, reg.cache_of(0))  # same cache: idempotent
+    with pytest.raises(ValueError):
+        reg.register(0, CappedCache())
+
+
+def test_registry_prefers_lowest_holder_deterministically():
+    reg = PeerCacheRegistry()
+    caches = [CappedCache() for _ in range(3)]
+    for n, c in enumerate(caches):
+        reg.register(n, c)
+    caches[1].put(5, b"a")
+    caches[2].put(5, b"a")
+    assert reg.lookup(5, requester=0) == 1
+
+
+# ---------------------------------------------------------------------------
+# PeerStore.
+# ---------------------------------------------------------------------------
+def _peer_setup(payloads, clock):
+    bucket = SimulatedBucketStore(payloads, clock=clock)
+    reg = PeerCacheRegistry()
+    mine, theirs = CappedCache(), CappedCache()
+    reg.register(0, mine)
+    reg.register(1, theirs)
+    store = PeerStore(bucket, reg, node=0, clock=clock)
+    return store, bucket, mine, theirs
+
+
+def test_peer_store_serves_from_peer_without_class_b(payloads_1k):
+    clock = VirtualClock()
+    store, bucket, _, theirs = _peer_setup(payloads_1k, clock)
+    theirs.put(3, payloads_1k[3])
+    t0 = clock.now()
+    assert store.get(3) == payloads_1k[3]
+    peer_dt = clock.now() - t0
+    assert store.peer_hits == 1
+    assert bucket.stats.class_b_requests == 0
+    # A peer transfer must be far cheaper than the modelled bucket GET.
+    assert peer_dt < bucket.model.get_seconds(1024) / 10
+
+
+def test_peer_store_falls_back_to_bucket(payloads_1k):
+    clock = VirtualClock()
+    store, bucket, _, _ = _peer_setup(payloads_1k, clock)
+    assert store.get(5) == payloads_1k[5]
+    assert store.peer_hits == 0
+    assert bucket.stats.class_b_requests == 1
+
+
+def test_peer_store_eviction_race_degrades_to_fallback(payloads_1k):
+    """Holder lists the key, but the entry is gone by the peer read."""
+    clock = VirtualClock()
+    store, bucket, _, theirs = _peer_setup(payloads_1k, clock)
+
+    class VanishingCache(CappedCache):
+        def peek(self, index):
+            return None  # evicted between lookup and read
+
+    vanishing = VanishingCache()
+    vanishing.put(4, payloads_1k[4])
+    store.registry._caches[1] = vanishing  # swap in behind the directory
+    assert store.get(4) == payloads_1k[4]
+    assert store.peer_hits == 0
+    assert bucket.stats.class_b_requests == 1
+
+
+def test_peer_store_stats_route_to_inner(payloads_1k):
+    clock = VirtualClock()
+    store, bucket, _, _ = _peer_setup(payloads_1k, clock)
+    store.get(1)
+    assert store.stats is bucket.stats
+    assert store.size_of(1) == 1024
+    assert store.list_objects() == sorted(payloads_1k)
+
+
+# ---------------------------------------------------------------------------
+# Simulator integration.
+# ---------------------------------------------------------------------------
+def test_sim_peer_cache_reduces_class_b_and_wait():
+    """Acceptance: 4-node cluster, equal per-node cache — peer mode strictly
+    cuts aggregate Class B and mean data-wait, with non-zero peer hits."""
+    import dataclasses
+
+    spec = dataclasses.replace(MNIST.scaled(0.05), n_nodes=4)
+    cache = spec.partition_size
+    runs = {}
+    for peer in (False, True):
+        cfg = SimConfig(cache_items=cache, peer_cache=peer)
+        stats, store = simulate_cluster(spec, cfg, epochs=2, seed=0)
+        runs[peer] = (stats, store)
+    local_stats, local_store = runs[False]
+    peer_stats, peer_store = runs[True]
+    assert peer_store.class_b_requests < local_store.class_b_requests
+    wait_local = sum(mean_data_wait(local_stats, e) for e in (0, 1))
+    wait_peer = sum(mean_data_wait(peer_stats, e) for e in (0, 1))
+    assert wait_peer < wait_local
+    assert sum(s.peer_hits for s in peer_stats) > 0
+    assert all(s.peer_hits == 0 for s in local_stats)
+    for s in peer_stats:
+        assert s.peer_hits <= s.misses
+        assert s.hits + s.misses == s.samples
+
+
+def test_sim_peer_cache_with_prefetch_cuts_class_b():
+    cfg_base = dict(cache_items=1024, prefetch=PrefetchConfig.fifty_fifty(1024))
+    spec = MNIST.scaled(0.05)
+    _, local = simulate_cluster(spec, SimConfig(**cfg_base), epochs=2, seed=0)
+    stats, peer = simulate_cluster(
+        spec, SimConfig(**cfg_base, peer_cache=True), epochs=2, seed=0
+    )
+    assert peer.class_b_requests < local.class_b_requests
+    assert sum(s.peer_hits for s in stats) > 0
+
+
+def test_sim_peer_cache_requires_local_cache():
+    with pytest.raises(ValueError):
+        simulate_cluster(MNIST.scaled(0.05), SimConfig(cache_items=None, peer_cache=True))
+
+
+def test_sim_config_label_mentions_peer():
+    assert "+peer" in SimConfig(cache_items=64, peer_cache=True).label()
+    assert "+peer" not in SimConfig(cache_items=64).label()
+
+
+# ---------------------------------------------------------------------------
+# Threaded runtime integration (loader + prefetch service over PeerStore).
+# ---------------------------------------------------------------------------
+def test_threaded_loader_counts_peer_hits(payloads_1k):
+    clock = VirtualClock()
+    bucket = SimulatedBucketStore(payloads_1k, clock=clock)
+    reg = PeerCacheRegistry()
+    world = 2
+    loaders, stores = [], []
+    for rank in range(world):
+        cache = CappedCache()
+        reg.register(rank, cache)
+        store = PeerStore(bucket, reg, node=rank, clock=clock)
+        ds = CachingDataset(store, cache, insert_on_miss=True)
+        sampler = DistributedPartitionSampler(len(payloads_1k), rank, world, seed=0)
+        loaders.append(
+            DeliLoader(ds, sampler, 16, PrefetchConfig.disabled(), clock=clock, node=rank)
+        )
+        stores.append(store)
+    for epoch in range(2):
+        for loader in loaders:
+            loader.set_epoch(epoch)
+            for _ in loader:
+                pass
+    e2 = [l.epoch_history[1] for l in loaders]
+    assert sum(s.peer_hits for s in e2) > 0
+    for s in e2:
+        assert s.peer_hits <= s.misses
+    # Every sample fetched from the bucket at most once across the cluster.
+    assert bucket.stats.class_b_requests == len(payloads_1k)
+
+
+def test_prefetch_service_over_peer_store_skips_bucket(payloads_1k):
+    clock = VirtualClock()
+    bucket = SimulatedBucketStore(payloads_1k, clock=clock)
+    reg = PeerCacheRegistry()
+    peer_cache = CappedCache()
+    reg.register(1, peer_cache)
+    for i in range(8):
+        peer_cache.put(i, payloads_1k[i])
+    my_cache = CappedCache()
+    reg.register(0, my_cache)
+    store = PeerStore(bucket, reg, node=0, clock=clock)
+    with PrefetchService(store, my_cache, clock=clock, list_every_fetch=False) as svc:
+        svc.request(list(range(16)))
+        assert svc.drain(timeout=30)
+    assert all(my_cache.contains(i) for i in range(16))
+    assert store.peer_hits == 8
+    assert svc.peer_fetches == 8  # service-side attribution of peer pulls
+    assert bucket.stats.class_b_requests == 8  # only the non-resident half
+    # Serving peers must not pollute the holder's own hit/miss accounting.
+    assert peer_cache.stats.hits == 0 and peer_cache.stats.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# Locality-aware tiering + cost hook.
+# ---------------------------------------------------------------------------
+def test_locality_sampler_peer_aware_balances_bucket_only():
+    """Node 0 over-caches (quota fills with its own hits); the leftover fill
+    must spread the expensive bucket-only samples evenly over the nodes with
+    remaining quota (on-node > on-peer > bucket-only tiering)."""
+    n, world = 36, 3
+    cached = [list(range(18)), [], []]  # node 0 holds half the dataset
+    samplers = [
+        LocalityAwareSampler(n, r, world, seed=1, peer_aware=True) for r in range(world)
+    ]
+    for s in samplers:
+        s.update_cache_views(cached)
+        s.set_epoch(1)
+    parts = [s.indices() for s in samplers]
+    # Deterministic, disjoint, exhaustive and balanced.
+    assert sorted(i for p in parts for i in p) == list(range(n))
+    assert all(len(p) == n // world for p in parts)
+    # Node 0's 12 slots all came from its own cache (on-node tier).
+    assert all(i < 18 for i in parts[0])
+    # The 18 bucket-only samples split evenly across the two cold nodes,
+    # and the 6 on-peer leftovers (cached on full node 0) fill the rest.
+    for p in parts[1:]:
+        assert len([i for i in p if i >= 18]) == 9
+        assert len([i for i in p if i < 18]) == 3
+
+
+def test_cost_with_peer_cache_cuts_class_b_line():
+    p = GcpPrices()
+    inp = WorkloadCostInputs(
+        n_nodes=4,
+        os_disk_gb=16.0,
+        dataset_gb=0.18,
+        n_samples=60_000,
+        epochs=2,
+        compute_seconds=30.0,
+        data_wait_seconds=60.0,
+    )
+    base = cost_bucket(p, inp)
+    peered = cost_with_peer_cache(p, inp, peer_hits_per_epoch=40_000)
+    assert peered["api"] < base["api"]
+    assert peered["total"] < base["total"]
+    # Avoided GETs cannot push the Class B term negative.
+    floor = cost_with_peer_cache(p, inp, peer_hits_per_epoch=10**9)
+    assert floor["api"] >= 0.0

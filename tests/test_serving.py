@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # XLA-compile-heavy; excluded from the smoke lane
+
 from repro import configs
 from repro.models import model as M
 from repro.serving import ServeEngine

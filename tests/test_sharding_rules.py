@@ -3,7 +3,10 @@ PartitionSpec construction, plus per-arch full-config spec validity."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

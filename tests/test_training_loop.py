@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # XLA-compile-heavy; excluded from the smoke lane
+
 from repro.core import PrefetchConfig
 from repro.data import decode_tokens, make_lm_pipeline
 from repro.models.config import ArchConfig
