@@ -1,23 +1,32 @@
-"""Shared benchmark plumbing: run simulator conditions, format tables,
+"""Shared benchmark plumbing: run data-plane conditions, format tables,
 collect checks.  Every benchmark module exposes ``run(fast=False) -> dict``
 with keys {"name", "rows", "checks", "notes"}; checks are (label, ok, detail).
+
+Conditions are ``repro.pipeline.DataPlaneSpec`` objects — built directly,
+lifted from a legacy ``SimConfig`` (``run_condition``), or declared by name
+through the component registry (``run_named``).  All three funnel into
+``run_spec``, so one spec description drives the simulator here and the
+threaded runtime in the parity tests.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Tuple, Union
 
 from repro.core import (
     CIFAR10,
     MNIST,
-    PrefetchConfig,
     SimConfig,
+    aggregate_tier_hits,
     mean_data_wait,
     mean_miss_rate,
-    simulate_cluster,
 )
 from repro.core.workloads import WorkloadSpec
+from repro.pipeline import DataPlaneSpec, condition
 
 FAST_FACTOR = 0.1  # --fast: 10% datasets, ratios preserved
+
+TIER_ORDER = ("ram", "disk", "peer", "bucket")
 
 
 def workloads(fast: bool) -> List[WorkloadSpec]:
@@ -26,20 +35,48 @@ def workloads(fast: bool) -> List[WorkloadSpec]:
     return [MNIST, CIFAR10]
 
 
-def run_condition(
-    spec: WorkloadSpec, cfg: SimConfig, epochs: int = 2, seed: int = 0
-) -> Dict:
-    stats, store = simulate_cluster(spec, cfg, epochs=epochs, seed=seed)
+def tier_breakdown(stats) -> str:
+    """'ram/disk/peer/bucket' counter column from EpochStats tier maps."""
+    agg = aggregate_tier_hits(stats)
+    return "/".join(str(agg.get(t, 0)) for t in TIER_ORDER)
+
+
+def run_spec(plane: DataPlaneSpec, epochs: int = 2) -> Dict:
+    """Run one declarative condition through the simulator projection."""
+    stats, store = plane.build_sim().run(epochs=epochs)
     return {
-        "workload": spec.name,
-        "condition": cfg.label(),
+        "workload": plane.workload.name,
+        "condition": plane.label(),
         "miss_e1": mean_miss_rate(stats, 0),
         "miss_e2": mean_miss_rate(stats, 1) if epochs > 1 else None,
         "wait_e1": mean_data_wait(stats, 0),
         "wait_e2": mean_data_wait(stats, 1) if epochs > 1 else None,
         "store": store,
         "stats": stats,
+        "tiers": aggregate_tier_hits(stats),
     }
+
+
+def run_condition(
+    spec: WorkloadSpec, cfg: Union[SimConfig, DataPlaneSpec], epochs: int = 2, seed: int = 0
+) -> Dict:
+    """Legacy entry point: lift a ``SimConfig`` into a spec and run it.
+
+    A ``DataPlaneSpec`` is accepted too; the ``spec``/``seed`` arguments
+    still apply (so ``trials`` seed-variation works for either form).
+    """
+    if isinstance(cfg, DataPlaneSpec):
+        plane = dataclasses.replace(cfg, workload=spec, seed=seed)
+    else:
+        plane = DataPlaneSpec.from_sim_config(spec, cfg, seed=seed)
+    return run_spec(plane, epochs=epochs)
+
+
+def run_named(
+    name: str, spec: WorkloadSpec, epochs: int = 2, seed: int = 0, **overrides
+) -> Dict:
+    """Run a registry-named condition (benchmarks declare by name)."""
+    return run_spec(condition(name, spec, seed=seed, **overrides), epochs=epochs)
 
 
 def trials(

@@ -1,64 +1,50 @@
-"""Cooperative peer-cache tier over the threaded runtime, 3 nodes.
+"""Cooperative peer-cache tier over the threaded runtime, 3 nodes —
+declared as one ``DataPlaneSpec`` instead of hand-wiring (cache, PeerStore,
+loader) triples.
 
-Each "node" is a (cache, PeerStore, loader) triple sharing one simulated
-GCS bucket and one ``PeerCacheRegistry``.  Epoch 1 fills every node's cache
-with its partition; epoch 2 re-randomizes partitions (PyTorch
-DistributedSampler semantics), so ~2/3 of each node's new partition lives
-in a *peer's* cache — without the tier those are all Class B bucket GETs.
+Epoch 1 fills every node's cache with its partition; epoch 2 re-randomizes
+partitions (PyTorch DistributedSampler semantics), so ~2/3 of each node's
+new partition lives in a *peer's* cache — without the tier those are all
+Class B bucket GETs.  The per-tier breakdown comes straight from the
+``EpochStats`` tier counters the ReadTier stack maintains.
 
     PYTHONPATH=src python examples/peer_cache_demo.py
 """
-from repro.core import (
-    CachingDataset,
-    CappedCache,
-    DeliLoader,
-    DistributedPartitionSampler,
-    PrefetchConfig,
-    RealClock,
-    SimulatedBucketStore,
-    make_synthetic_payloads,
+from repro.core import RealClock, aggregate_tier_hits
+from repro.core.workloads import WorkloadSpec
+from repro.pipeline import DataPlaneSpec
+
+WORKLOAD = WorkloadSpec(
+    name="peer-demo",
+    n_samples=1536,
+    sample_bytes=784,
+    batch_size=64,
+    compute_per_epoch_s=0.0,
+    n_nodes=3,
 )
-from repro.distributed import PeerCacheRegistry, PeerStore
 
-N_SAMPLES = 1536
-N_NODES = 3
-BATCH = 64
-CLOCK = RealClock(scale=2e-4)  # modelled I/O shrunk 5000x, ratios preserved
-
-
-def make_node(rank, payloads, registry):
-    bucket = SimulatedBucketStore(payloads, clock=CLOCK)
-    cache = CappedCache()  # unlimited, the paper's best case
-    registry.register(rank, cache)
-    store = PeerStore(bucket, registry, node=rank, clock=CLOCK)
-    dataset = CachingDataset(store, cache, insert_on_miss=True)
-    sampler = DistributedPartitionSampler(N_SAMPLES, rank, N_NODES, seed=0)
-    loader = DeliLoader(
-        dataset, sampler, BATCH, PrefetchConfig.disabled(), clock=CLOCK, node=rank
-    )
-    return loader, store
+SPEC = DataPlaneSpec(
+    workload=WORKLOAD,
+    cache_items=-1,  # unlimited, the paper's best case
+    peer_cache=True,
+)
 
 
 def main():
-    payloads = make_synthetic_payloads(N_SAMPLES, sample_bytes=784)
-    registry = PeerCacheRegistry()
-    nodes = [make_node(rank, payloads, registry) for rank in range(N_NODES)]
-    for epoch in range(2):
-        for rank, (loader, _) in enumerate(nodes):
-            loader.set_epoch(epoch)
-            for _ in loader:
-                pass
-            s = loader.last_epoch_stats
-            print(
-                f"epoch {epoch} node {rank}: miss {s.miss_rate:.1%} | "
-                f"peer hits {s.peer_hits}/{s.misses} misses | "
-                f"data-wait {s.data_wait_seconds:.3f}s"
-            )
-    class_b = sum(store.inner.stats.class_b_requests for _, store in nodes)
-    peer_hits = sum(store.peer_hits for _, store in nodes)
+    clock = RealClock(scale=2e-4)  # modelled I/O shrunk 5000x, ratios preserved
+    with SPEC.build_runtime(clock=clock) as cluster:
+        stats, store = cluster.run(epochs=2)
+    for s in stats:
+        print(
+            f"epoch {s.epoch} node {s.node}: miss {s.miss_rate:.1%} | "
+            f"peer hits {s.peer_hits}/{s.misses} misses | "
+            f"data-wait {s.data_wait_seconds:.3f}s"
+        )
+    tiers = aggregate_tier_hits(stats)
     print(
-        f"\ncluster: {class_b} Class B bucket GETs, {peer_hits} reads served "
-        f"by peers (each one a Class B request avoided)"
+        f"\ncluster: {store.class_b_requests} Class B bucket GETs, "
+        f"{tiers.get('peer', 0)} reads served by peers (each one a Class B "
+        f"request avoided) | tier breakdown {dict(sorted(tiers.items()))}"
     )
 
 

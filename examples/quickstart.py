@@ -1,39 +1,84 @@
-"""Quickstart: the DELI data plane in ~40 lines.
+"""Quickstart: the DELI data plane in ~40 lines, declaratively.
 
-Builds the paper's node pipeline (simulated GCS bucket -> capped cache ->
-async pre-fetch service -> loader) with the 50/50 policy, runs two epochs,
-and prints the paper's two metrics: per-epoch data-wait and miss rate.
+One ``DataPlaneSpec`` describes the paper's node pipeline (simulated GCS
+bucket -> capped cache -> async pre-fetch service -> loader) with the 50/50
+policy; ``build_runtime()`` assembles it, we run two epochs and print the
+paper's two metrics: per-epoch data-wait and miss rate (plus the per-tier
+read breakdown the tier stack attributes).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Migration table — old manual wiring -> the declarative spec:
+
+    old (hand-assembled)                      new (DataPlaneSpec)
+    ----------------------------------------  -------------------------------
+    SimulatedBucketStore(payloads, model,     spec = DataPlaneSpec(workload=,
+        clock=...)                                bucket=model,
+    CappedCache(max_items=N)                      cache_items=N,
+    PrefetchConfig.fifty_fifty(N)                 prefetch=PrefetchConfig
+    PrefetchService(store, cache, ...)                .fifty_fifty(N),
+    CachingDataset(store, cache,                  payload_factory=...)
+        insert_on_miss=...)
+    DistributedPartitionSampler(n, r, w)      cluster = spec.build_runtime()
+    DeliLoader(dataset, sampler, batch,       loader = cluster.loaders[rank]
+        cfg, service, clock)
+    # simulator: SimConfig(...) +             stats, store = spec.build_sim()
+    #   simulate_cluster(spec, cfg)               .run(epochs=2)
+    # peer tier: PeerCacheRegistry +          DataPlaneSpec(peer_cache=True)
+    #   PeerStore(bucket, reg, node)
+    # named conditions:                       pipeline.condition("cache+peer",
+    #   (hand-rolled per benchmark)               workload, cache_items=512)
+
+The old constructors still work (they are thin shims over the tier stack);
+new code should declare a spec.
 """
-from repro.core import PrefetchConfig
-from repro.data import decode_tokens, make_lm_pipeline
+from repro.core import BucketModel, PrefetchConfig, RealClock
+from repro.core.workloads import WorkloadSpec
+from repro.data import decode_tokens, make_lm_payloads
+from repro.pipeline import DataPlaneSpec
 
 CACHE = 512  # samples resident per node at a time (a fraction of the data)
+SEQ_LEN, VOCAB = 128, 1024
+
+WORKLOAD = WorkloadSpec(
+    name="lm-quickstart",
+    n_samples=4096,
+    sample_bytes=(SEQ_LEN + 1) * 4,  # int32 tokens, inputs + shifted labels
+    batch_size=64,
+    compute_per_epoch_s=0.0,
+    n_nodes=1,
+)
+
+SPEC = DataPlaneSpec(
+    workload=WORKLOAD,
+    cache_items=CACHE,
+    prefetch=PrefetchConfig.fifty_fifty(CACHE),  # the paper's best config
+    # fast-forwarded bucket: Table-I ratios at ~1/1000 wall time
+    bucket=BucketModel(
+        request_latency_s=0.020e-3, per_connection_bw=20e9, listing_latency_s=0.050e-3
+    ),
+    payload_factory=lambda spec: make_lm_payloads(
+        spec.workload.n_samples, SEQ_LEN, VOCAB
+    ),
+)
 
 
 def main():
-    loader, service, dataset = make_lm_pipeline(
-        n_samples=4096,
-        seq_len=128,
-        vocab=1024,
-        batch_size=64,
-        cache_items=CACHE,
-        policy=PrefetchConfig.fifty_fifty(CACHE),  # the paper's best config
-    )
-    with service:  # starts the async pre-fetch worker
+    with SPEC.build_runtime(clock=RealClock()) as cluster:
+        loader = cluster.loaders[0]
         for epoch in range(2):
             loader.set_epoch(epoch)
             n_tokens = 0
             for batch in loader:
                 n_tokens += sum(decode_tokens(p).size for p in batch.payloads)
             s = loader.last_epoch_stats
+            tiers = dict(sorted(s.tier_hits.items()))
             print(
                 f"epoch {epoch}: {s.samples} samples, {n_tokens} tokens | "
                 f"data-wait {s.data_wait_seconds:.3f}s | "
-                f"miss rate {s.miss_rate:.1%} (hits {s.hits}, misses {s.misses})"
+                f"miss rate {s.miss_rate:.1%} | tiers {tiers}"
             )
-    print("bucket requests:", dataset.store.stats)
+        print("bucket requests:", cluster.store_stats())
 
 
 if __name__ == "__main__":

@@ -8,6 +8,11 @@ Public API:
     simulation:  SimConfig, simulate_cluster, NodeSimulator
     models:      BucketModel, DiskModel, PipelineCostModel (Table-I calibrated)
     cost:        GcpPrices, cost_disk_baseline, cost_bucket, ...
+
+The declarative layer lives in ``repro.pipeline``: ``DataPlaneSpec`` builds
+both the simulator and the threaded runtime from one description, and the
+read path is an explicit ``TierStack`` (ram/disk/peer/bucket) with per-tier
+attribution.  The constructors exported here remain supported shims.
 """
 from repro.core.bandwidth import (
     DEFAULT_BUCKET,
@@ -57,5 +62,13 @@ from repro.core.supersample import (
     pack_supersample,
     unpack_supersample,
 )
-from repro.core.types import EpochStats, FetchRequest, RunStats, Sample, SampleKey, StoreStats
+from repro.core.types import (
+    EpochStats,
+    FetchRequest,
+    RunStats,
+    Sample,
+    SampleKey,
+    StoreStats,
+    aggregate_tier_hits,
+)
 from repro.core.workloads import CIFAR10, MNIST, PAPER_WORKLOADS, WorkloadSpec, lm_token_workload

@@ -24,13 +24,21 @@ from __future__ import annotations
 import collections
 import os
 import threading
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.types import SampleKey
 
 
 class CacheStats:
-    __slots__ = ("hits", "misses", "inserts", "evictions", "ram_hits", "disk_hits")
+    __slots__ = (
+        "hits",
+        "misses",
+        "inserts",
+        "evictions",
+        "ram_hits",
+        "disk_hits",
+        "guard_skips",
+    )
 
     def __init__(self) -> None:
         self.hits = 0
@@ -39,6 +47,10 @@ class CacheStats:
         self.evictions = 0
         self.ram_hits = 0
         self.disk_hits = 0
+        # Entries the eviction guard protected during evictions that DID
+        # find another victim (how often Hoard-style last-copy protection
+        # actually changed an outcome; all-protected FIFO fallbacks add 0).
+        self.guard_skips = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {k: getattr(self, k) for k in self.__slots__}
@@ -72,6 +84,15 @@ class CappedCache:
         self.spill_dir = spill_dir
         self.session = session
         self.stats = CacheStats()
+        # Replication-aware eviction (Hoard-style): a guard saying "this
+        # index must not be evicted" (e.g. it is the last cluster-resident
+        # copy).  Guarded entries are skipped in FIFO order; if *every*
+        # entry is guarded the plain FIFO victim is evicted anyway, so
+        # capacity bounds always hold.
+        self.eviction_guard: Optional[Callable[[int], bool]] = None
+        # Residency listeners (the peer-cache registry's copy counter).
+        self._on_insert: Optional[Callable[[int], None]] = None
+        self._on_evict: Optional[Callable[[int], None]] = None
         self._lock = threading.RLock()
         # FIFO order: key -> payload (bytes) | None (spilled to disk).
         self._entries: "collections.OrderedDict[SampleKey, Optional[bytes]]" = (
@@ -91,14 +112,33 @@ class CappedCache:
         return os.path.join(self.spill_dir, f"{key.session}-{key.index}.bin")
 
     def _evict_one_locked(self) -> None:
-        key, payload = self._entries.popitem(last=False)
-        self._total_bytes -= self._sizes.pop(key)
+        victim: Optional[SampleKey] = None
+        if self.eviction_guard is not None:
+            # Oldest *unguarded* entry; fall through to plain FIFO when
+            # everything is guarded (capacity always wins).  The scan
+            # early-stops at the first evictable entry, so the typical
+            # probe count is 1; ``guard_skips`` counts the protections
+            # that actually redirected an eviction.
+            skipped = 0
+            for key in self._entries:
+                if not self.eviction_guard(key.index):
+                    victim = key
+                    break
+                skipped += 1
+            if victim is not None:
+                self.stats.guard_skips += skipped
+        if victim is None:
+            victim = next(iter(self._entries))
+        payload = self._entries.pop(victim)
+        self._total_bytes -= self._sizes.pop(victim)
         if payload is None and self.spill_dir:
             try:
-                os.remove(self._spill_path(key))
+                os.remove(self._spill_path(victim))
             except FileNotFoundError:
                 pass
         self.stats.evictions += 1
+        if self._on_evict is not None:
+            self._on_evict(victim.index)
 
     def _over_capacity_locked(self) -> bool:
         if self.max_items is not None and len(self._entries) > self.max_items:
@@ -131,6 +171,8 @@ class CappedCache:
             self._sizes[key] = len(payload)
             self._total_bytes += len(payload)
             self.stats.inserts += 1
+            if self._on_insert is not None:
+                self._on_insert(index)
             while self._over_capacity_locked():
                 self._evict_one_locked()
             self._maybe_spill_locked()
@@ -177,6 +219,59 @@ class CappedCache:
                 self.stats.disk_hits -= 1
                 self.stats.misses += 1
             return None, None
+
+    # -- tier-granular probes (repro.pipeline.tiers) -----------------------
+    def probe_ram(self, index: int) -> Optional[bytes]:
+        """RAM-tier lookup: hit accounting only on a hit, no miss counted.
+
+        ``RamTier``/``DiskTier``/``note_miss`` together reproduce exactly
+        the accounting ``get_with_tier`` performs in one call, but let the
+        tier stack interleave other tiers between the probes.
+        """
+        key = self._key(index)
+        with self._lock:
+            payload = self._entries.get(key)
+            if payload is None:  # absent, or spilled to the disk tier
+                return None
+            self.stats.hits += 1
+            self.stats.ram_hits += 1
+            return payload
+
+    def probe_disk(self, index: int) -> Optional[bytes]:
+        """Disk-(spill-)tier lookup; None when absent or RAM-resident."""
+        key = self._key(index)
+        with self._lock:
+            if key not in self._entries or self._entries[key] is not None:
+                return None
+            self.stats.hits += 1
+            self.stats.disk_hits += 1
+        # Spill read outside the lock (same race handling as get_with_tier):
+        # a concurrent eviction deleting the file re-treats this as a miss.
+        try:
+            with open(self._spill_path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            with self._lock:
+                self.stats.hits -= 1
+                self.stats.disk_hits -= 1
+            return None
+
+    def note_miss(self) -> None:
+        """Count one full-cache miss (both tier probes came back empty)."""
+        with self._lock:
+            self.stats.misses += 1
+
+    def set_residency_listener(
+        self,
+        on_insert: Optional[Callable[[int], None]],
+        on_evict: Optional[Callable[[int], None]],
+    ) -> None:
+        """Install insert/evict callbacks (fired under the cache lock; the
+        peer-cache registry uses them to maintain cluster copy counts).
+        Callbacks must not call back into this cache."""
+        with self._lock:
+            self._on_insert = on_insert
+            self._on_evict = on_evict
 
     def peek(self, index: int) -> Optional[bytes]:
         """Read a payload WITHOUT touching stats (or FIFO state).

@@ -1,34 +1,69 @@
 """Dataset layer: cache-through access to a sample store.
 
 ``CachingDataset`` is the analogue of the paper's custom Dataset wrapper
-(§IV-B): a ``get`` first consults the node-local capped cache; on a miss it
-falls back to the backing store (the bucket), and — *only when no pre-fetch
-service owns cache population* — inserts the fetched sample ("we choose to
+(§IV-B): a ``get`` walks the node's ordered read-tier stack — local cache
+(RAM tier, then spill-disk tier), optional cooperative peer tier, then the
+backing bucket — and, *only when no pre-fetch service owns cache
+population*, inserts bucket/peer payloads into the cache ("we choose to
 not have the worker perform a cache insert in this case, as the pre-fetch
 service will eventually perform this insert operation", §IV-C).
+
+The stack is built by ``repro.pipeline.tiers`` (explicit composition,
+replacing the seed's ``getattr(store, "get_with_origin")`` duck-typing);
+attribution comes back as a ``TierResult`` per read, surfaced here as
+``AccessResult`` with backward-compatible ``hit``/``ram_hit``/``peer_hit``
+views.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core.cache import CappedCache
 from repro.core.store import SampleStore
+from repro.pipeline.tiers import (
+    LOCAL_TIERS,
+    ReadTier,
+    TierStack,
+    local_tiers_for_cache,
+    tiers_for_store,
+)
 
 
 @dataclasses.dataclass
 class AccessResult:
+    """One read's attribution, keyed by the tier that served it."""
+
     payload: bytes
-    hit: bool
-    ram_hit: bool = False
-    # Local-cache miss served from a peer node's cache (PeerStore tier)
-    # instead of the bucket — no Class B request was issued.
-    peer_hit: bool = False
+    tier: str  # "ram" | "disk" | "peer" | "bucket" | ...
+    class_b: int = 0
+    nbytes: int = 0
+    seconds: float = 0.0
+
+    @property
+    def hit(self) -> bool:
+        """Local-cache hit (the paper's 'cache hit')."""
+        return self.tier in LOCAL_TIERS
+
+    @property
+    def ram_hit(self) -> bool:
+        return self.tier == "ram"
+
+    @property
+    def peer_hit(self) -> bool:
+        """Served from a peer node's cache — no Class B request issued."""
+        return self.tier == "peer"
 
 
 class CachingDataset:
-    """Cache-through dataset over (store, cache)."""
+    """Cache-through dataset over an ordered read-tier stack.
+
+    The legacy ``(store, cache)`` constructor is preserved: it composes
+    ``[RamTier, DiskTier] + tiers_for_store(store)`` automatically.  Pass
+    ``tiers`` to substitute a custom remote stack (the local cache tiers
+    are always derived from ``cache``).
+    """
 
     def __init__(
         self,
@@ -36,39 +71,41 @@ class CachingDataset:
         cache: Optional[CappedCache],
         insert_on_miss: bool = True,
         transform: Optional[Callable[[bytes], bytes]] = None,
+        tiers: Optional[Sequence[ReadTier]] = None,
     ):
         self.store = store
         self.cache = cache
         self.insert_on_miss = insert_on_miss
         self.transform = transform
+        remote = list(tiers) if tiers is not None else tiers_for_store(store)
+        self.tiers = TierStack(local_tiers_for_cache(cache) + remote)
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, index: int) -> AccessResult:
-        if self.cache is not None:
-            cached, tier = self.cache.get_with_tier(index)
-            if cached is not None:
-                with self._lock:
-                    self.hits += 1
-                payload = self.transform(cached) if self.transform else cached
-                return AccessResult(payload, hit=True, ram_hit=tier == "ram")
-        # A PeerStore exposes ``get_with_origin``: a per-call flag saying
-        # whether this miss was served by a peer instead of the bucket
-        # (per-call so concurrent prefetch workers can't misattribute it).
-        get_with_origin = getattr(self.store, "get_with_origin", None)
-        if get_with_origin is not None:
-            payload, peer_hit = get_with_origin(index)
-        else:
-            payload = self.store.get(index)
-            peer_hit = False
+        result = self.tiers.fetch(index)
+        hit = result.tier in LOCAL_TIERS
         with self._lock:
-            self.misses += 1
-        if self.cache is not None and self.insert_on_miss:
-            self.cache.put(index, payload)
+            if hit:
+                self.hits += 1
+            else:
+                self.misses += 1
+        payload = result.payload
+        if not hit:
+            if self.cache is not None:
+                self.cache.note_miss()
+                if self.insert_on_miss:
+                    self.cache.put(index, payload)
         if self.transform:
             payload = self.transform(payload)
-        return AccessResult(payload, hit=False, peer_hit=peer_hit)
+        return AccessResult(
+            payload,
+            tier=result.tier,
+            class_b=result.class_b,
+            nbytes=result.nbytes,
+            seconds=result.seconds,
+        )
 
     def __getitem__(self, index: int) -> bytes:
         return self.get(index).payload

@@ -72,11 +72,25 @@ class DeliLoader:
 
     # -- checkpoint/restore of the data-plane cursor -------------------------
     def state_dict(self) -> dict:
-        return {"epoch": self._epoch, "cursor": self._resume_cursor}
+        """Checkpoint the data-plane cursor AND the accumulated per-epoch
+        stats, so a resumed run reports its full trajectory (the seed
+        dropped ``epoch_history`` across restore)."""
+        return {
+            "epoch": self._epoch,
+            "cursor": self._resume_cursor,
+            "history": [dataclasses.asdict(s) for s in self.epoch_history],
+        }
 
     def load_state_dict(self, state: dict) -> None:
         self.set_epoch(int(state["epoch"]))
         self._resume_cursor = int(state["cursor"])
+        if "history" in state:
+            self.epoch_history = [
+                s if isinstance(s, EpochStats) else EpochStats(**s)
+                for s in state["history"]
+            ]
+        # Pre-history checkpoints carry no trajectory: keep whatever this
+        # loader already accumulated (documented reset-free behaviour).
 
     def __iter__(self) -> Iterator[Batch]:
         stats = EpochStats(epoch=self._epoch, node=self.node)
@@ -102,18 +116,13 @@ class DeliLoader:
             dt = self.clock.now() - t0
             consumed += 1
             stats.samples += 1
+            stats.record(result.tier)
             stats.data_wait_seconds += dt
             batch_wait += dt
             if result.hit:
-                stats.hits += 1
                 batch_hits += 1
-                if result.ram_hit:
-                    stats.ram_hits += 1
             else:
-                stats.misses += 1
                 batch_misses += 1
-                if result.peer_hit:
-                    stats.peer_hits += 1
             batch_indices.append(idx)
             batch_payloads.append(result.payload)
             if len(batch_indices) == self.batch_size:

@@ -23,10 +23,12 @@ Beyond-paper behaviours:
   * hedged GETs for straggler mitigation when running over a real threaded
     store (duplicate request after ``hedge_after_s``);
   * cooperative peer caching: hand the service a
-    ``repro.distributed.PeerStore`` and every per-key GET first consults
-    peers' caches (the generic thread-pool path below), so fetch rounds
-    pull cluster-resident samples over the inter-node network instead of
-    issuing Class B bucket requests for them.
+    ``repro.distributed.PeerStore`` and every per-key GET walks the remote
+    tier stack (peer tier first, bucket second — see
+    ``repro.pipeline.tiers``), so fetch rounds pull cluster-resident
+    samples over the inter-node network instead of issuing Class B bucket
+    requests for them.  Attribution is explicit: each fetch returns a
+    ``TierResult`` naming the serving tier.
 """
 from __future__ import annotations
 
@@ -36,10 +38,11 @@ from concurrent.futures import ThreadPoolExecutor, TimeoutError as FutureTimeout
 from typing import List, Optional, Sequence
 
 from repro.core.cache import CappedCache
-from repro.core.clock import Clock, RealClock
+from repro.core.clock import Clock
 from repro.core.listing_cache import ListingCache
 from repro.core.store import SampleStore, SimulatedBucketStore
 from repro.core.types import FetchRequest
+from repro.pipeline.tiers import ReadTier, TierResult, TierStack, tiers_for_store
 
 
 class PrefetchService:
@@ -53,21 +56,25 @@ class PrefetchService:
         listing_cache: Optional[ListingCache] = None,
         streaming_insert: bool = False,
         hedge_after_s: Optional[float] = None,
+        tiers: Optional[Sequence[ReadTier]] = None,
     ):
         self.store = store
         self.cache = cache
         self.n_connections = n_connections
-        self.clock = clock or getattr(store, "clock", None) or RealClock()
+        self.clock = clock or store.clock
         self.list_every_fetch = list_every_fetch
         self.listing_cache = listing_cache
         self.streaming_insert = streaming_insert
         self.hedge_after_s = hedge_after_s
+        # Remote read path for per-key GETs: peer tier (when the store is a
+        # PeerStore) then bucket — the same explicit stack the demand path
+        # walks past its local cache tiers.
+        self.tiers = TierStack(list(tiers) if tiers is not None else tiers_for_store(store))
         self.hedges = 0
         self.rounds_completed = 0
         self.samples_fetched = 0
         # Round objects pulled from a peer's cache instead of the bucket
-        # (only populated when ``store`` is a PeerStore-like object
-        # exposing ``get_with_origin``).
+        # (populated when the tier stack contains a peer tier).
         self.peer_fetches = 0
         self._queue: "queue.Queue[Optional[FetchRequest]]" = queue.Queue()
         self._request_counter = 0
@@ -144,12 +151,9 @@ class PrefetchService:
                 self.cache.put_many(zip(keys, payloads))
         else:
             payloads_by_key = {}
-            get_with_origin = getattr(self.store, "get_with_origin", None)
 
-            def _get(k):
-                if get_with_origin is None:
-                    return self.store.get(k), False
-                return get_with_origin(k)
+            def _get(k) -> TierResult:
+                return self.tiers.fetch(k)
 
             with ThreadPoolExecutor(max_workers=self.n_connections) as pool:
                 futures = {k: pool.submit(_get, k) for k in keys}
@@ -160,28 +164,26 @@ class PrefetchService:
                     # else (regression: such payloads were never cached).
                     if self.hedge_after_s is not None:
                         try:
-                            payload, from_peer = fut.result(timeout=self.hedge_after_s)
+                            result = fut.result(timeout=self.hedge_after_s)
                         except FutureTimeout:
                             self.hedges += 1
                             hedge = pool.submit(_get, k)
-                            payload = None
+                            result = None
                             for f in (fut, hedge):
                                 try:
-                                    payload, from_peer = f.result(
-                                        timeout=self.hedge_after_s * 10
-                                    )
+                                    result = f.result(timeout=self.hedge_after_s * 10)
                                     break
                                 except FutureTimeout:
                                     continue
-                            if payload is None:
-                                payload, from_peer = fut.result()
+                            if result is None:
+                                result = fut.result()
                     else:
-                        payload, from_peer = fut.result()
-                    if from_peer:
+                        result = fut.result()
+                    if result.tier == "peer":
                         self.peer_fetches += 1
-                    payloads_by_key[k] = payload
+                    payloads_by_key[k] = result.payload
                     if self.streaming_insert:
-                        self.cache.put(k, payload)
+                        self.cache.put(k, result.payload)
             if not self.streaming_insert:
                 self.cache.put_many((k, payloads_by_key[k]) for k in keys)
         if listing_thread:

@@ -65,6 +65,9 @@ class SimConfig:
     # Cooperative peer-cache tier: on a local miss, ask peers' caches over
     # the modelled inter-node network before falling back to the bucket.
     peer_cache: bool = False
+    # Hoard-style replication-aware eviction: a member cache declines to
+    # evict the last cluster-resident copy of a sample (needs peer_cache).
+    replication_aware_eviction: bool = False
 
     def label(self) -> str:
         if self.source == "disk":
@@ -73,6 +76,8 @@ class SimConfig:
             return "gcp-direct"
         cache = "unlimited" if self.cache_items == -1 else str(self.cache_items)
         peer = "+peer" if self.peer_cache else ""
+        if self.peer_cache and self.replication_aware_eviction:
+            peer += "+repl"
         if self.prefetch is None:
             return f"cache[{cache}]{peer}"
         return (
@@ -173,8 +178,8 @@ class NodeSimulator:
             peer_s = n_peer * self.network.transfer_seconds(
                 self.spec.sample_bytes
             ) + len(bucket_keys) * self.network.lookup_seconds()
-            if stats is not None:
-                stats.peer_hits += n_peer
+            if stats is not None and n_peer:
+                stats.record("peer", n_peer)
         # The round's keys are known when it is issued, so the (naive)
         # per-round listing proceeds CONCURRENTLY with the parallel GETs —
         # it is pure Class A accounting traffic, not a serialization point.
@@ -209,33 +214,33 @@ class NodeSimulator:
         pipeline = self.pipeline
         wait = pipeline.cpu_overhead_s
         if self.cfg.source == "disk":
+            # Disk-source baseline: no cache tier at all; every read is a
+            # (local-disk) miss — no tier recorded, misses are derived.
             wait += self.disk.get_seconds(self.spec.sample_bytes)
-            stats.misses += 1  # no cache in the disk baseline; count as miss=read
         elif self.cache is None:
             # Direct-from-bucket baseline: sequential fallback GET.
             wait += self._sequential_get_s()
-            stats.misses += 1
+            stats.record("bucket")
             self.store_stats.class_b_requests += 1
             self.store_stats.bytes_read += self.spec.sample_bytes
         else:
             self._apply_completed_inserts()
             if self.cache.get(idx) is not None:
+                # Sim caches are RAM-only (sentinel payloads, no spill).
                 wait += pipeline.ram_hit_s
-                stats.hits += 1
-                stats.ram_hits += 1
+                stats.record("ram")
             elif self._peer_fetch(idx):
                 # Local miss served by a peer's cache over the inter-node
                 # network: RTT + streaming, no Class B request.
                 wait += self.network.transfer_seconds(self.spec.sample_bytes)
-                stats.misses += 1
-                stats.peer_hits += 1
+                stats.record("peer")
                 if self.cfg.prefetch is None:
                     self.cache.put(idx, _SENTINEL)
             else:
                 if self.registry is not None:
                     wait += self.network.lookup_seconds()  # failed peer probe
                 wait += self._sequential_get_s()
-                stats.misses += 1
+                stats.record("bucket")
                 self.store_stats.class_b_requests += 1
                 self.store_stats.bytes_read += self.spec.sample_bytes
                 if self.cfg.prefetch is None:
@@ -302,7 +307,9 @@ def simulate_cluster(
 
         if cfg.cache_items is None:
             raise ValueError("peer_cache requires a local cache (cache_items)")
-        registry = PeerCacheRegistry()
+        registry = PeerCacheRegistry(
+            replication_aware=cfg.replication_aware_eviction
+        )
         for node in nodes:
             node.join_peer_registry(registry)
     samplers: List = []

@@ -35,10 +35,16 @@ class StoreError(RuntimeError):
 
 
 class SampleStore(abc.ABC):
-    """Abstract sample source keyed by integer dataset index."""
+    """Abstract sample source keyed by integer dataset index.
+
+    Every store carries a ``clock`` (wall time by default); wrappers and
+    services read it directly instead of duck-typing ``getattr(store,
+    "clock")`` — it is part of the interface.
+    """
 
     def __init__(self) -> None:
         self.stats = StoreStats()
+        self.clock: Clock = RealClock()
         self._stats_lock = threading.Lock()
 
     @abc.abstractmethod
@@ -242,7 +248,7 @@ class ReliableStore(SampleStore):
         self.inner = inner
         self.max_attempts = max_attempts
         self.base_backoff_s = base_backoff_s
-        self.clock = clock or getattr(inner, "clock", None) or RealClock()
+        self.clock = clock or inner.clock
         self.on_retry = on_retry
         self.retries = 0
         self.hedges = 0

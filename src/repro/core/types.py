@@ -10,7 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Sequence
+from typing import Dict, Iterable, Optional, Sequence
+
+#: Tiers whose hits count as *local cache* hits.  Defined here (the
+#: dependency root) and re-exported by ``repro.pipeline.tiers`` as part of
+#: the tier API — one source of truth for hit/miss derivation.
+LOCAL_TIERS = ("ram", "disk")
 
 
 class StorageClass(enum.Enum):
@@ -73,26 +78,67 @@ class StoreStats:
 
 @dataclasses.dataclass
 class EpochStats:
-    """Per-node, per-epoch data-plane metrics (the paper's two metrics)."""
+    """Per-node, per-epoch data-plane metrics (the paper's two metrics).
+
+    Attribution is a *per-tier counter map*: ``tier_hits[tier]`` counts
+    reads served by that tier ("ram"/"disk" = local cache, "peer" = a peer
+    node's cache over the network, "bucket" = a Class B object GET).  The
+    legacy scalar fields (``hits``, ``misses``, ``ram_hits``,
+    ``peer_hits``) survive as derived properties so every seed-era consumer
+    keeps working.
+
+    Peer accounting note (unchanged semantics from PR 1): a demand read
+    served by a peer is recorded under ``tier_hits["peer"]`` and still
+    counts as a local-cache miss.  The simulator additionally folds
+    pre-fetch round pulls into the "peer" counter; the threaded runtime
+    reports service-side pulls on ``PrefetchService.peer_fetches`` /
+    ``PeerStore.peer_hits`` instead (the async service can't attribute them
+    to an epoch).
+    """
 
     epoch: int
     node: int
     samples: int = 0
-    hits: int = 0
-    misses: int = 0
     data_wait_seconds: float = 0.0  # time the training loop blocked on data
     compute_seconds: float = 0.0
     evictions: int = 0
-    ram_hits: int = 0  # two-tier cache: hits served from the RAM tier
-    # Cooperative peer-cache tier: reads served by a peer node's cache over
-    # the inter-node network instead of the bucket; each one is a Class B
-    # request avoided.  Demand misses served by peers stay counted inside
-    # ``misses`` (the local cache did miss).  The simulator additionally
-    # folds pre-fetch round pulls into this field; the threaded runtime
-    # reports service-side pulls on ``PrefetchService.peer_fetches`` /
-    # ``PeerStore.peer_hits`` instead (the async service can't attribute
-    # them to an epoch).
-    peer_hits: int = 0
+    tier_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def record(self, tier: str, n: int = 1) -> None:
+        """Attribute ``n`` reads to ``tier``."""
+        self.tier_hits[tier] = self.tier_hits.get(tier, 0) + n
+
+    def tier(self, name: str) -> int:
+        return self.tier_hits.get(name, 0)
+
+    # -- legacy scalar views -------------------------------------------------
+    @property
+    def hits(self) -> int:
+        """Local-cache hits (RAM + spill-disk tiers)."""
+        return sum(self.tier_hits.get(t, 0) for t in LOCAL_TIERS)
+
+    @property
+    def misses(self) -> int:
+        """Local-cache misses: every sample access not served locally
+        (includes peer-served reads — the local cache did miss — and the
+        disk-source baseline, which has no cache at all)."""
+        return self.samples - self.hits
+
+    @property
+    def ram_hits(self) -> int:
+        return self.tier_hits.get("ram", 0)
+
+    @property
+    def disk_hits(self) -> int:
+        return self.tier_hits.get("disk", 0)
+
+    @property
+    def peer_hits(self) -> int:
+        return self.tier_hits.get("peer", 0)
+
+    @property
+    def bucket_reads(self) -> int:
+        return self.tier_hits.get("bucket", 0)
 
     @property
     def miss_rate(self) -> float:
@@ -101,6 +147,15 @@ class EpochStats:
     @property
     def hit_rate(self) -> float:
         return 1.0 - self.miss_rate
+
+
+def aggregate_tier_hits(stats: Iterable["EpochStats"]) -> Dict[str, int]:
+    """Sum per-tier counters over epochs/nodes (benchmark tables, parity)."""
+    out: Dict[str, int] = {}
+    for s in stats:
+        for tier, n in s.tier_hits.items():
+            out[tier] = out.get(tier, 0) + n
+    return out
 
 
 @dataclasses.dataclass

@@ -11,11 +11,16 @@ module adds that tier to both execution paths:
     ``CappedCache`` to ask for a given sample index.  In this repo the
     "network" is a ``NetworkModel`` (timing only); the registry is the
     integration point for a real RPC transport (gRPC sidecar, NCCL
-    broadcast, ...) later.
-  * ``PeerStore`` — a ``SampleStore`` that, on a local-cache miss, first
-    asks its peers' caches over the modelled inter-node network and only
-    then falls back to the wrapped bucket store.  A peer hit costs an RTT +
-    payload/bandwidth instead of a bucket GET (no Class B request billed).
+    broadcast, ...) later.  It also maintains *resident-copy counts* per
+    sample; with ``replication_aware=True`` member caches decline to evict
+    the last cluster-resident copy of a sample (Hoard keeps one), so peers
+    keep serving it instead of someone re-paying a bucket GET.
+  * ``PeerStore`` — a ``SampleStore`` whose ``peer_lookup`` serves a read
+    from a peer's cache over the modelled inter-node network, returning the
+    explicit per-tier attribution (``repro.pipeline.tiers.TierResult``); a
+    miss charges the lookup RTT and returns None so the next tier (the
+    wrapped bucket) takes over.  A peer hit costs an RTT + payload/bandwidth
+    instead of a bucket GET (no Class B request billed).
 
 Consistency note: caches are keyed by (session, index) and entries are
 immutable once inserted (payloads are content-addressed by dataset index),
@@ -29,8 +34,9 @@ from typing import Dict, List, Optional
 
 from repro.core.bandwidth import DEFAULT_NETWORK, NetworkModel
 from repro.core.cache import CappedCache
-from repro.core.clock import Clock, RealClock
+from repro.core.clock import Clock
 from repro.core.store import SampleStore
+from repro.pipeline.tiers import TierResult
 
 
 class PeerCacheRegistry:
@@ -40,19 +46,73 @@ class PeerCacheRegistry:
     per-node prefetch workers and training loops.  ``lookup`` returns the
     id of a node (other than the requester) whose cache currently holds the
     index — preferring the lowest node id for determinism — or ``None``.
+
+    ``replication_aware=True`` (Hoard-style, beyond-paper) wires an
+    eviction guard into every registered cache: the FIFO victim search
+    skips entries whose cluster-wide resident-copy count is 1, so the last
+    copy of a sample survives as long as anything else can be evicted
+    instead.  Copy counts are maintained via the caches' residency
+    listeners (updated under each cache's own lock, then this registry's
+    lock; the registry never takes a cache lock while holding its own, so
+    the lock order is acyclic).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, replication_aware: bool = False) -> None:
+        self.replication_aware = replication_aware
         self._caches: Dict[int, CappedCache] = {}
+        self._copies: Dict[int, int] = {}  # index -> cluster-resident copies
         self._lock = threading.Lock()
         self.lookups = 0
         self.peer_hits = 0
+
+    # -- residency bookkeeping ----------------------------------------------
+    def _note_insert(self, index: int) -> None:
+        with self._lock:
+            self._copies[index] = self._copies.get(index, 0) + 1
+
+    def _note_evict(self, index: int) -> None:
+        with self._lock:
+            left = self._copies.get(index, 0) - 1
+            if left > 0:
+                self._copies[index] = left
+            else:
+                self._copies.pop(index, None)
+
+    def _guard_last_copy(self, index: int) -> bool:
+        """Eviction guard: True = protected (last cluster-resident copy).
+
+        Called once per probed entry with the probing cache's lock held, so
+        this reads ``_copies`` WITHOUT the registry lock: a single
+        ``dict.get`` is atomic under the GIL, and the guard is advisory —
+        a racing insert/evict at worst yields one momentarily stale
+        protection decision, never a wrong eviction.  (Caches report how
+        often protection redirected an eviction via
+        ``CacheStats.guard_skips``.)
+        """
+        return self._copies.get(index, 0) <= 1
+
+    def resident_copies(self, index: int) -> int:
+        """How many member caches currently hold ``index``."""
+        with self._lock:
+            return self._copies.get(index, 0)
 
     def register(self, node: int, cache: CappedCache) -> None:
         with self._lock:
             if node in self._caches and self._caches[node] is not cache:
                 raise ValueError(f"node {node} already registered")
+            already = self._caches.get(node) is cache
             self._caches[node] = cache
+        if already:
+            return
+        # Fold pre-registration residents into the copy counts.  Read the
+        # key set without holding the registry lock (lock-order discipline).
+        resident = cache.keys()
+        with self._lock:
+            for idx in resident:
+                self._copies[idx] = self._copies.get(idx, 0) + 1
+        cache.set_residency_listener(self._note_insert, self._note_evict)
+        if self.replication_aware:
+            cache.eviction_guard = self._guard_last_copy
 
     def nodes(self) -> List[int]:
         with self._lock:
@@ -96,12 +156,14 @@ class PeerCacheRegistry:
 class PeerStore(SampleStore):
     """Store wrapper: peers' caches first, wrapped bucket store second.
 
-    ``get`` resolution order (the local cache itself is in front of this
-    store, inside ``CachingDataset``/``NodeSimulator``):
+    ``peer_lookup`` is the ``PeerTier`` entry point (the local cache itself
+    sits in front of this store, inside ``CachingDataset``/
+    ``NodeSimulator``):
 
-      1. registry lookup -> peer cache ``get`` + modelled network transfer
-         (no Class B request, no bucket latency);
-      2. fallback to ``inner.get`` (the usual bucket miss path).
+      1. registry lookup -> peer cache read + modelled network transfer
+         (no Class B request, no bucket latency) -> ``TierResult``;
+      2. None on a miss (after charging the lookup RTT), so the stack falls
+         through to the wrapped bucket — the usual Class B miss path.
 
     The eviction race (peer listed as holder, entry gone by the time we
     read) degrades to the fallback, never to an error.
@@ -121,22 +183,20 @@ class PeerStore(SampleStore):
         self.registry = registry
         self.node = node
         self.network = network
-        self.clock = clock or getattr(inner, "clock", None) or RealClock()
+        self.clock = clock or inner.clock
         self.charge_lookup_on_miss = charge_lookup_on_miss
         self.peer_hits = 0
         self.peer_bytes = 0
         self.peer_seconds = 0.0
         self._peer_lock = threading.Lock()
 
-    def get(self, index: int, **kw) -> bytes:
-        return self.get_with_origin(index, **kw)[0]
+    def peer_lookup(self, index: int) -> Optional[TierResult]:
+        """Serve ``index`` from a peer's cache; None = not cluster-resident.
 
-    def get_with_origin(self, index: int, **kw) -> "tuple[bytes, bool]":
-        """GET returning ``(payload, served_by_peer)``.
-
-        The flag is per-call, so callers attributing hits (e.g.
-        ``CachingDataset``) stay correct when a prefetch worker and the
-        training loop share this store concurrently.
+        The returned ``TierResult`` is the per-call attribution (tier
+        "peer", zero Class B), so callers sharing this store concurrently
+        (prefetch workers + the training loop) can never misattribute a
+        read.
         """
         holder = self.registry.lookup(index, requester=self.node)
         if holder is not None:
@@ -150,9 +210,28 @@ class PeerStore(SampleStore):
                     self.peer_bytes += len(payload)
                     self.peer_seconds += dt
                 self.registry.record_hit()
-                return payload, True
+                return TierResult(
+                    payload, "peer", class_b=0, nbytes=len(payload), seconds=dt
+                )
         if self.charge_lookup_on_miss:
             self.clock.sleep(self.network.lookup_seconds())
+        return None
+
+    def get(self, index: int, **kw) -> bytes:
+        result = self.peer_lookup(index)
+        if result is not None:
+            return result.payload
+        return self.inner.get(index, **kw)
+
+    def get_with_origin(self, index: int, **kw) -> "tuple[bytes, bool]":
+        """Legacy shim: GET returning ``(payload, served_by_peer)``.
+
+        Pre-tier callers used this per-call flag for attribution; new code
+        reads ``TierResult.tier`` from ``peer_lookup`` / the tier stack.
+        """
+        result = self.peer_lookup(index)
+        if result is not None:
+            return result.payload, True
         return self.inner.get(index, **kw), False
 
     def size_of(self, index: int) -> int:

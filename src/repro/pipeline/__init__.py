@@ -1,0 +1,77 @@
+"""repro.pipeline — the declarative data-plane layer.
+
+Two abstractions (ISSUE 2 tentpole):
+
+  * ``tiers``    — the composable read-tier stack (``ReadTier`` protocol,
+    ``RamTier``/``DiskTier``/``PeerTier``/``BucketTier``, ``TierStack``):
+    the explicit form of the paper's layered read path, with per-tier
+    attribution (``TierResult``) replacing ad-hoc duck-typing.
+  * ``spec``     — ``DataPlaneSpec``: one declarative description of a data
+    plane (store backend, tier sizes, prefetch policy, sampler, peer cache,
+    cluster shape) with ``build_sim()`` and ``build_runtime()``, so the
+    discrete-event simulator and the threaded runtime are two projections
+    of the same object instead of two hand-synchronized assemblies.
+
+Plus ``registry`` (named benchmark conditions / samplers) and ``parity``
+(the sim-vs-runtime agreement harness).
+
+``tiers`` is imported eagerly (it is a dependency of ``repro.core``'s
+dataset/prefetcher); the spec layer is exposed lazily (PEP 562) because it
+imports ``repro.core`` back — eager import here would cycle during
+``repro.core`` initialization.
+"""
+from repro.pipeline.tiers import (  # noqa: F401
+    LOCAL_TIERS,
+    BucketTier,
+    DiskTier,
+    PeerTier,
+    RamTier,
+    ReadTier,
+    TierResult,
+    TierStack,
+    local_tiers_for_cache,
+    tiers_for_store,
+)
+
+_SPEC_EXPORTS = ("DataPlaneSpec", "SimCluster", "RuntimeCluster")
+_REGISTRY_EXPORTS = (
+    "condition",
+    "register_condition",
+    "list_conditions",
+    "make_sampler",
+    "register_sampler",
+    "list_samplers",
+)
+_PARITY_EXPORTS = ("ParityReport", "run_parity", "assert_parity")
+
+__all__ = [
+    "LOCAL_TIERS",
+    "BucketTier",
+    "DiskTier",
+    "PeerTier",
+    "RamTier",
+    "ReadTier",
+    "TierResult",
+    "TierStack",
+    "local_tiers_for_cache",
+    "tiers_for_store",
+    *_SPEC_EXPORTS,
+    *_REGISTRY_EXPORTS,
+    *_PARITY_EXPORTS,
+]
+
+
+def __getattr__(name):
+    if name in _SPEC_EXPORTS:
+        from repro.pipeline import spec
+
+        return getattr(spec, name)
+    if name in _REGISTRY_EXPORTS:
+        from repro.pipeline import registry
+
+        return getattr(registry, name)
+    if name in _PARITY_EXPORTS:
+        from repro.pipeline import parity
+
+        return getattr(parity, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

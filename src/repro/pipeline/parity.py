@@ -1,0 +1,83 @@
+"""Sim-vs-runtime parity harness.
+
+The whole point of ``DataPlaneSpec`` is that the discrete-event simulator
+and the threaded runtime are projections of one description.  For
+*deterministic* specs — no asynchronous pre-fetch service racing the
+training loop — the two projections must agree **exactly** on everything
+that is a pure function of cache-state evolution:
+
+  * per-tier hit counts (ram / peer / bucket), aggregated over the run;
+  * total Class B requests issued to the bucket;
+  * per-(epoch, node) sample counts.
+
+``assert_parity`` checks exactly that on a ``VirtualClock``.  Specs with
+prefetching enabled are rejected: the threaded service's completion times
+depend on OS scheduling, so agreement there is *statistical* (covered by
+``tests/test_core_sim_and_cost.py::test_sim_vs_threaded_runtime_miss_rate_agreement``),
+not exact — refusing loudly beats a flaky assertion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.clock import VirtualClock
+from repro.core.types import aggregate_tier_hits
+from repro.pipeline.spec import DataPlaneSpec
+
+
+@dataclasses.dataclass
+class ParityReport:
+    spec_label: str
+    epochs: int
+    sim_tiers: Dict[str, int]
+    runtime_tiers: Dict[str, int]
+    sim_class_b: int
+    runtime_class_b: int
+    sim_samples: List[Tuple[int, int, int]]  # (epoch, node, samples)
+    runtime_samples: List[Tuple[int, int, int]]
+
+    @property
+    def exact(self) -> bool:
+        return (
+            self.sim_tiers == self.runtime_tiers
+            and self.sim_class_b == self.runtime_class_b
+            and self.sim_samples == self.runtime_samples
+        )
+
+    def describe(self) -> str:
+        status = "EXACT" if self.exact else "DIVERGED"
+        return (
+            f"parity[{self.spec_label}, {self.epochs} epochs]: {status}\n"
+            f"  tiers   sim={self.sim_tiers} runtime={self.runtime_tiers}\n"
+            f"  class B sim={self.sim_class_b} runtime={self.runtime_class_b}"
+        )
+
+
+def run_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
+    """Build both projections of ``spec`` and compare their accounting."""
+    if spec.prefetch is not None and spec.prefetch.enabled:
+        raise ValueError(
+            "exact parity is defined for deterministic specs only; disable "
+            "prefetching (the async service races the loop by design — use "
+            "the statistical agreement test for prefetch-enabled specs)"
+        )
+    sim_stats, sim_store = spec.build_sim().run(epochs=epochs)
+    with spec.build_runtime(clock=VirtualClock()) as cluster:
+        run_stats, run_store = cluster.run(epochs=epochs)
+    return ParityReport(
+        spec_label=spec.label(),
+        epochs=epochs,
+        sim_tiers=aggregate_tier_hits(sim_stats),
+        runtime_tiers=aggregate_tier_hits(run_stats),
+        sim_class_b=sim_store.class_b_requests,
+        runtime_class_b=run_store.class_b_requests,
+        sim_samples=[(s.epoch, s.node, s.samples) for s in sim_stats],
+        runtime_samples=[(s.epoch, s.node, s.samples) for s in run_stats],
+    )
+
+
+def assert_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
+    report = run_parity(spec, epochs=epochs)
+    assert report.exact, report.describe()
+    return report

@@ -1,0 +1,169 @@
+"""Named-component registry: declare benchmark conditions by name.
+
+Benchmarks and examples used to hand-assemble every experimental condition;
+with the registry a condition is a *name* plus overrides:
+
+    from repro.pipeline import condition
+    spec = condition("cache+peer", MNIST.scaled(0.05), cache_items=512)
+
+Registered names cover the paper's figures (disk / gcp-direct / cache /
+fifty-fifty / full-fetch) and the beyond-paper tiers (cache+peer,
+cache+peer+repl, locality).  Third parties extend via
+``@register_condition("my-condition")``.
+
+Samplers are registered the same way ("partition", "locality") so
+``DataPlaneSpec.sampler`` stays a plain string.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.core.policy import PrefetchConfig
+from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
+from repro.core.workloads import WorkloadSpec
+from repro.pipeline.spec import DataPlaneSpec
+
+# ---------------------------------------------------------------------------
+# Samplers.
+# ---------------------------------------------------------------------------
+_SAMPLERS: Dict[str, Callable[..., Sampler]] = {}
+
+
+def register_sampler(name: str, factory: Callable[..., Sampler]) -> None:
+    if name in _SAMPLERS:
+        raise ValueError(f"sampler {name!r} already registered")
+    _SAMPLERS[name] = factory
+
+
+def make_sampler(
+    name: str, *, n_samples: int, rank: int, world: int, seed: int, peer_aware: bool
+) -> Sampler:
+    try:
+        factory = _SAMPLERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler {name!r}; registered: {sorted(_SAMPLERS)}"
+        ) from None
+    return factory(
+        n_samples=n_samples, rank=rank, world=world, seed=seed, peer_aware=peer_aware
+    )
+
+
+def list_samplers() -> List[str]:
+    return sorted(_SAMPLERS)
+
+
+register_sampler(
+    "partition",
+    lambda *, n_samples, rank, world, seed, peer_aware: DistributedPartitionSampler(
+        n_samples, rank, world, seed=seed
+    ),
+)
+register_sampler(
+    "locality",
+    lambda *, n_samples, rank, world, seed, peer_aware: LocalityAwareSampler(
+        n_samples, rank, world, seed=seed, peer_aware=peer_aware
+    ),
+)
+
+# ---------------------------------------------------------------------------
+# Conditions.
+# ---------------------------------------------------------------------------
+_CONDITIONS: Dict[str, Callable[..., DataPlaneSpec]] = {}
+
+
+def register_condition(name: str) -> Callable:
+    """Decorator: register a ``(workload, **overrides) -> DataPlaneSpec``."""
+
+    def deco(fn: Callable[..., DataPlaneSpec]) -> Callable[..., DataPlaneSpec]:
+        if name in _CONDITIONS:
+            raise ValueError(f"condition {name!r} already registered")
+        _CONDITIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def condition(name: str, workload: WorkloadSpec, **overrides) -> DataPlaneSpec:
+    """Build a named condition's spec for ``workload``."""
+    try:
+        factory = _CONDITIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown condition {name!r}; registered: {sorted(_CONDITIONS)}"
+        ) from None
+    return factory(workload, **overrides)
+
+
+def list_conditions() -> List[str]:
+    return sorted(_CONDITIONS)
+
+
+@register_condition("disk")
+def _disk(workload: WorkloadSpec, **kw) -> DataPlaneSpec:
+    """The paper's local-disk baseline (simulator-only source)."""
+    return DataPlaneSpec(workload=workload, source="disk", **kw)
+
+
+@register_condition("gcp-direct")
+def _gcp_direct(workload: WorkloadSpec, **kw) -> DataPlaneSpec:
+    """Direct bucket reads, no cache (the paper's worst case)."""
+    return DataPlaneSpec(workload=workload, cache_items=None, **kw)
+
+
+@register_condition("cache")
+def _cache(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """Node-local capped cache, no pre-fetch (paper §IV-B)."""
+    return DataPlaneSpec(workload=workload, cache_items=cache_items, **kw)
+
+
+@register_condition("cache+peer")
+def _cache_peer(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """PR 1's cooperative peer-cache tier on top of the local cache."""
+    return DataPlaneSpec(
+        workload=workload, cache_items=cache_items, peer_cache=True, **kw
+    )
+
+
+@register_condition("cache+peer+repl")
+def _cache_peer_repl(
+    workload: WorkloadSpec, cache_items: int = -1, **kw
+) -> DataPlaneSpec:
+    """Peer tier + Hoard-style replication-aware eviction."""
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        peer_cache=True,
+        replication_aware_eviction=True,
+        **kw,
+    )
+
+
+@register_condition("fifty-fifty")
+def _fifty_fifty(workload: WorkloadSpec, cache_items: int = 2048, **kw) -> DataPlaneSpec:
+    """The paper's best configuration: f = T = cache/2 (§V-B)."""
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        prefetch=PrefetchConfig.fifty_fifty(cache_items),
+        **kw,
+    )
+
+
+@register_condition("full-fetch")
+def _full_fetch(workload: WorkloadSpec, fetch_size: int = 2048, **kw) -> DataPlaneSpec:
+    """'Full Fetch': cache == fetch size, threshold 0 (Fig. 9 baseline)."""
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=fetch_size,
+        prefetch=PrefetchConfig.full_fetch(fetch_size),
+        **kw,
+    )
+
+
+@register_condition("locality")
+def _locality(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """Cache-aware partitioning (beyond-paper, Yang & Cong '19 direction)."""
+    return DataPlaneSpec(
+        workload=workload, cache_items=cache_items, sampler="locality", **kw
+    )

@@ -1,0 +1,301 @@
+"""DataPlaneSpec: one declarative description of the DELI data plane.
+
+The paper's §IV pipeline — bucket, node-local capped cache, pre-fetch
+service, (PR 1's) cooperative peer tier — existed in this repo twice: once
+as the discrete-event ``NodeSimulator`` and once as the threaded
+``DeliLoader`` assembly, each hand-wired by every benchmark and example.
+NoPFS (Dryden et al., "Clairvoyant Prefetching") demonstrates the right
+shape: one pipeline description drives both the performance *model* and the
+*execution*.  ``DataPlaneSpec`` is that description:
+
+    spec = DataPlaneSpec(workload=MNIST.scaled(0.05), cache_items=512,
+                         peer_cache=True)
+    sim_stats, sim_store = spec.build_sim().run(epochs=2)
+    with spec.build_runtime() as cluster:
+        run_stats, run_store = cluster.run(epochs=2)
+
+Both projections share the spec's sampler seeds, tier sizes, policy object
+and calibrated models, so the parity harness (``repro.pipeline.parity``)
+can assert they agree on a deterministic clock — the drift the ROADMAP's
+"concurrent-node simulation" item warns about becomes a tested property
+instead of a hope.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.bandwidth import (
+    DEFAULT_BUCKET,
+    DEFAULT_DISK,
+    DEFAULT_NETWORK,
+    DEFAULT_PIPELINE,
+    BucketModel,
+    DiskModel,
+    NetworkModel,
+    PipelineCostModel,
+)
+from repro.core.cache import CappedCache
+from repro.core.clock import Clock, VirtualClock
+from repro.core.dataset import CachingDataset
+from repro.core.loader import DeliLoader
+from repro.core.policy import PrefetchConfig
+from repro.core.prefetcher import PrefetchService
+from repro.core.simulator import SimConfig, simulate_cluster
+from repro.core.store import SimulatedBucketStore, make_synthetic_payloads
+from repro.core.types import EpochStats, StoreStats
+from repro.core.workloads import WorkloadSpec
+from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
+
+
+@dataclasses.dataclass(frozen=True)
+class DataPlaneSpec:
+    """One experimental condition, declaratively.
+
+    ``sampler`` is a name resolved through ``repro.pipeline.registry``
+    ("partition" = the paper's DistributedSampler semantics, "locality" =
+    the beyond-paper cache-aware partitioner), so benchmark conditions can
+    be declared entirely by name.
+    """
+
+    workload: WorkloadSpec
+    source: str = "bucket"  # "bucket" | "disk"
+    cache_items: Optional[int] = None  # None = no cache; -1 = unlimited
+    prefetch: Optional[PrefetchConfig] = None  # None = no prefetching
+    n_connections: int = 16
+    streaming_insert: bool = False
+    list_every_fetch: bool = True
+    sampler: str = "partition"
+    peer_cache: bool = False
+    replication_aware_eviction: bool = False
+    seed: int = 0
+    # Calibrated models (Table I defaults; override for fast-forwarded runs).
+    bucket: BucketModel = DEFAULT_BUCKET
+    disk: DiskModel = DEFAULT_DISK
+    pipeline_model: PipelineCostModel = DEFAULT_PIPELINE
+    network: NetworkModel = DEFAULT_NETWORK
+    # Runtime payload source; None = index-tagged synthetic bytes of the
+    # workload's sample size.  (The simulator never materializes payloads.)
+    payload_factory: Optional[Callable[["DataPlaneSpec"], Dict[int, bytes]]] = None
+
+    def __post_init__(self) -> None:
+        if self.source not in ("bucket", "disk"):
+            raise ValueError(f"unknown source {self.source!r}")
+        if self.peer_cache and self.cache_items is None:
+            raise ValueError("peer_cache requires a local cache (cache_items)")
+        if self.replication_aware_eviction and not self.peer_cache:
+            raise ValueError("replication_aware_eviction requires peer_cache")
+        if self.cache_items is not None and self.cache_items != -1 and self.cache_items <= 0:
+            raise ValueError("cache_items must be positive, -1 (unlimited) or None")
+
+    # -- naming ---------------------------------------------------------------
+    def label(self) -> str:
+        return self.to_sim_config().label()
+
+    # -- projections ----------------------------------------------------------
+    def to_sim_config(self) -> SimConfig:
+        """The simulator's view of this spec."""
+        return SimConfig(
+            source=self.source,
+            cache_items=self.cache_items,
+            prefetch=self.prefetch,
+            n_connections=self.n_connections,
+            streaming_insert=self.streaming_insert,
+            list_every_fetch=self.list_every_fetch,
+            locality_aware=self.sampler == "locality",
+            peer_cache=self.peer_cache,
+            replication_aware_eviction=self.replication_aware_eviction,
+        )
+
+    @classmethod
+    def from_sim_config(
+        cls, workload: WorkloadSpec, cfg: SimConfig, seed: int = 0, **overrides
+    ) -> "DataPlaneSpec":
+        """Lift a legacy ``SimConfig`` into a spec (benchmark migration)."""
+        return cls(
+            workload=workload,
+            source=cfg.source,
+            cache_items=cfg.cache_items,
+            prefetch=cfg.prefetch,
+            n_connections=cfg.n_connections,
+            streaming_insert=cfg.streaming_insert,
+            list_every_fetch=cfg.list_every_fetch,
+            sampler="locality" if cfg.locality_aware else "partition",
+            peer_cache=cfg.peer_cache,
+            replication_aware_eviction=cfg.replication_aware_eviction,
+            seed=seed,
+            **overrides,
+        )
+
+    def build_sim(self) -> "SimCluster":
+        """The discrete-event projection (virtual time, no threads)."""
+        return SimCluster(self)
+
+    def build_runtime(self, clock: Optional[Clock] = None) -> "RuntimeCluster":
+        """The threaded-runtime projection (real stores, loaders, services).
+
+        Default clock is a ``VirtualClock`` so modelled I/O costs no wall
+        time; pass ``RealClock(scale=...)`` for timing-race experiments.
+        """
+        return RuntimeCluster(self, clock=clock)
+
+    def build_payloads(self) -> Dict[int, bytes]:
+        if self.payload_factory is not None:
+            return self.payload_factory(self)
+        return make_synthetic_payloads(
+            self.workload.n_samples, self.workload.sample_bytes, seed=self.seed
+        )
+
+
+class SimCluster:
+    """``DataPlaneSpec`` -> discrete-event cluster simulation."""
+
+    def __init__(self, spec: DataPlaneSpec):
+        self.spec = spec
+        self.config = spec.to_sim_config()
+
+    def run(self, epochs: int = 2) -> Tuple[List[EpochStats], StoreStats]:
+        return simulate_cluster(
+            self.spec.workload,
+            self.config,
+            epochs=epochs,
+            seed=self.spec.seed,
+            bucket=self.spec.bucket,
+            disk=self.spec.disk,
+            pipeline=self.spec.pipeline_model,
+            network=self.spec.network,
+        )
+
+
+class RuntimeCluster:
+    """``DataPlaneSpec`` -> per-node threaded pipelines over one dataset.
+
+    Mirrors ``simulate_cluster``'s structure: one (store, cache, dataset,
+    sampler, loader[, service]) per node, all caches joined to one
+    ``PeerCacheRegistry`` when the spec asks for the peer tier.  ``run``
+    drives nodes' epochs in the same (epoch-outer, rank-inner) order as the
+    simulator so cache/peer visibility matches and parity is well-defined.
+    """
+
+    def __init__(self, spec: DataPlaneSpec, clock: Optional[Clock] = None):
+        if spec.source != "bucket":
+            raise ValueError(
+                "build_runtime supports the bucket source; the disk baseline "
+                "is simulator-only (no local dataset files in this container)"
+            )
+        from repro.pipeline.registry import make_sampler  # lazy: registry imports spec
+
+        self.spec = spec
+        self.clock: Clock = clock if clock is not None else VirtualClock()
+        w = spec.workload
+        payloads = spec.build_payloads()
+        prefetch_on = spec.prefetch is not None and spec.prefetch.enabled
+        self.registry: Optional[PeerCacheRegistry] = (
+            PeerCacheRegistry(replication_aware=spec.replication_aware_eviction)
+            if spec.peer_cache
+            else None
+        )
+        self.buckets: List[SimulatedBucketStore] = []
+        self.caches: List[Optional[CappedCache]] = []
+        self.samplers: List = []
+        self.services: List[Optional[PrefetchService]] = []
+        self.loaders: List[DeliLoader] = []
+        for rank in range(w.n_nodes):
+            bucket = SimulatedBucketStore(payloads, model=spec.bucket, clock=self.clock)
+            cache: Optional[CappedCache] = None
+            if spec.cache_items is not None:
+                max_items = None if spec.cache_items == -1 else spec.cache_items
+                cache = CappedCache(max_items=max_items)
+            store = bucket
+            if self.registry is not None:
+                assert cache is not None  # enforced by spec validation
+                self.registry.register(rank, cache)
+                store = PeerStore(
+                    bucket, self.registry, node=rank, network=spec.network, clock=self.clock
+                )
+            dataset = CachingDataset(store, cache, insert_on_miss=not prefetch_on)
+            service = None
+            if prefetch_on:
+                if cache is None:
+                    raise ValueError("prefetching requires a cache (cache_items)")
+                service = PrefetchService(
+                    store,
+                    cache,
+                    n_connections=spec.n_connections,
+                    clock=self.clock,
+                    list_every_fetch=spec.list_every_fetch,
+                    streaming_insert=spec.streaming_insert,
+                )
+            sampler = make_sampler(
+                spec.sampler,
+                n_samples=w.n_samples,
+                rank=rank,
+                world=w.n_nodes,
+                seed=spec.seed,
+                peer_aware=spec.peer_cache,
+            )
+            loader = DeliLoader(
+                dataset,
+                sampler,
+                batch_size=w.batch_size,
+                config=spec.prefetch if prefetch_on else PrefetchConfig.disabled(),
+                service=service,
+                clock=self.clock,
+                node=rank,
+            )
+            self.buckets.append(bucket)
+            self.caches.append(cache)
+            self.samplers.append(sampler)
+            self.services.append(service)
+            self.loaders.append(loader)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        for svc in self.services:
+            if svc is not None:
+                svc.close()
+
+    def __enter__(self) -> "RuntimeCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- driving --------------------------------------------------------------
+    def _update_locality_views(self) -> None:
+        if self.spec.sampler != "locality":
+            return
+        if self.registry is not None:
+            views = self.registry.cache_views()
+        else:
+            views = [c.keys() if c else [] for c in self.caches]
+        for s in self.samplers:
+            s.update_cache_views(views)
+
+    def run(
+        self, epochs: int = 2, compute: bool = False
+    ) -> Tuple[List[EpochStats], StoreStats]:
+        """Drive every node for N epochs (epoch-outer, rank-inner, exactly
+        like ``simulate_cluster``); returns per-node per-epoch stats plus
+        the aggregate bucket request accounting."""
+        w = self.spec.workload
+        all_stats: List[EpochStats] = []
+        for e in range(epochs):
+            self._update_locality_views()
+            for loader in self.loaders:
+                loader.set_epoch(e)
+                for _ in loader:
+                    if compute:
+                        self.clock.sleep(w.compute_per_batch_s)
+                assert loader.last_epoch_stats is not None
+                all_stats.append(loader.last_epoch_stats)
+            for svc in self.services:
+                if svc is not None:
+                    svc.drain()
+        return all_stats, self.store_stats()
+
+    def store_stats(self) -> StoreStats:
+        agg = StoreStats()
+        for bucket in self.buckets:
+            agg = agg.merge(bucket.stats)
+        return agg

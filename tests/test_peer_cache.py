@@ -228,6 +228,81 @@ def test_prefetch_service_over_peer_store_skips_bucket(payloads_1k):
 
 
 # ---------------------------------------------------------------------------
+# Replication-aware eviction (Hoard-style: keep the last cluster copy).
+# ---------------------------------------------------------------------------
+def test_registry_tracks_resident_copies():
+    reg = PeerCacheRegistry()
+    c0, c1 = CappedCache(), CappedCache()
+    c0.put(7, b"x")  # pre-registration resident: folded in at register()
+    reg.register(0, c0)
+    reg.register(1, c1)
+    assert reg.resident_copies(7) == 1
+    c1.put(7, b"x")
+    assert reg.resident_copies(7) == 2
+    c0.clear()  # evictions decrement
+    assert reg.resident_copies(7) == 1
+    c1.clear()
+    assert reg.resident_copies(7) == 0
+
+
+def test_replication_aware_cache_skips_last_copy_victim():
+    """FIFO would evict the oldest entry; when it is the last
+    cluster-resident copy, the next-oldest *replicated* entry goes instead."""
+    reg = PeerCacheRegistry(replication_aware=True)
+    c0 = CappedCache(max_items=2)
+    c1 = CappedCache(max_items=2)
+    reg.register(0, c0)
+    reg.register(1, c1)
+    c0.put(1, b"a")  # last copy of 1 (FIFO-oldest in c0)
+    c0.put(2, b"b")
+    c1.put(2, b"b")  # 2 now has two cluster copies
+    c0.put(3, b"c")  # over capacity: FIFO victim would be 1
+    assert c0.contains(1)  # protected: last cluster-resident copy
+    assert not c0.contains(2)  # the replicated entry was evicted instead
+    assert c0.contains(3)
+    assert reg.resident_copies(2) == 1  # c1 still holds it
+    assert c0.stats.guard_skips == 1  # exactly one protection changed an outcome
+
+
+def test_replication_aware_cache_falls_back_when_all_protected():
+    """Capacity always wins: if every entry is a last copy, plain FIFO."""
+    reg = PeerCacheRegistry(replication_aware=True)
+    c0 = CappedCache(max_items=2)
+    reg.register(0, c0)
+    c0.put(1, b"a")
+    c0.put(2, b"b")
+    c0.put(3, b"c")  # all entries are last copies -> evict oldest (1)
+    assert len(c0) == 2
+    assert not c0.contains(1)
+    assert c0.contains(2) and c0.contains(3)
+    assert c0.stats.guard_skips == 0  # capacity fallback declined nothing
+
+
+def test_replication_aware_eviction_cuts_bucket_refetches():
+    """ISSUE 2 satellite: at equal per-node capacity, declining to evict
+    the last cluster-resident copy keeps more of the dataset peer-servable,
+    so the cluster re-issues strictly fewer Class B bucket GETs."""
+    import dataclasses
+
+    spec = dataclasses.replace(MNIST.scaled(0.05), n_nodes=4)
+    cache = max(1, int(spec.partition_size * 0.75))
+    results = {}
+    for repl in (False, True):
+        cfg = SimConfig(
+            cache_items=cache, peer_cache=True, replication_aware_eviction=repl
+        )
+        stats, store = simulate_cluster(spec, cfg, epochs=2, seed=0)
+        results[repl] = (store.class_b_requests, sum(s.peer_hits for s in stats))
+    assert results[True][0] < results[False][0]
+    assert results[True][1] >= results[False][1]  # more peer-served reads
+
+
+def test_sim_config_label_mentions_repl():
+    cfg = SimConfig(cache_items=64, peer_cache=True, replication_aware_eviction=True)
+    assert "+peer+repl" in cfg.label()
+
+
+# ---------------------------------------------------------------------------
 # Locality-aware tiering + cost hook.
 # ---------------------------------------------------------------------------
 def test_locality_sampler_peer_aware_balances_bucket_only():

@@ -1,0 +1,212 @@
+"""ISSUE 2 tentpole: the declarative DataPlaneSpec + composable ReadTier
+stack — tier attribution, named conditions, and sim/runtime parity."""
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    MNIST,
+    CachingDataset,
+    CappedCache,
+    InMemoryStore,
+    PrefetchConfig,
+    RealClock,
+    SimConfig,
+    SimulatedBucketStore,
+    StoreError,
+    VirtualClock,
+    aggregate_tier_hits,
+    make_synthetic_payloads,
+)
+from repro.distributed import PeerCacheRegistry, PeerStore
+from repro.pipeline import (
+    BucketTier,
+    DataPlaneSpec,
+    DiskTier,
+    RamTier,
+    TierResult,
+    TierStack,
+    assert_parity,
+    condition,
+    list_conditions,
+    list_samplers,
+    run_parity,
+    tiers_for_store,
+)
+
+
+# ---------------------------------------------------------------------------
+# Tier stack.
+# ---------------------------------------------------------------------------
+def test_tier_stack_orders_and_attributes(payloads_1k):
+    store = InMemoryStore(payloads_1k)
+    cache = CappedCache(max_items=8)
+    stack = TierStack([RamTier(cache), DiskTier(cache), BucketTier(store)])
+    assert stack.names() == ["ram", "disk", "bucket"]
+    r = stack.fetch(3)
+    assert isinstance(r, TierResult)
+    assert r.tier == "bucket" and r.class_b == 1 and r.payload == payloads_1k[3]
+    assert not r.local_hit
+    cache.put(3, payloads_1k[3])
+    r = stack.fetch(3)
+    assert r.tier == "ram" and r.class_b == 0 and r.local_hit
+
+
+def test_tier_stack_disk_tier_serves_spilled_entries(tmp_path, payloads_1k):
+    cache = CappedCache(max_items=8, ram_items=1, spill_dir=str(tmp_path / "spill"))
+    store = InMemoryStore(payloads_1k)
+    stack = TierStack([RamTier(cache), DiskTier(cache), BucketTier(store)])
+    cache.put(1, payloads_1k[1])
+    cache.put(2, payloads_1k[2])  # spills 1 to disk (ram_items=1)
+    assert stack.fetch(2).tier == "ram"
+    r = stack.fetch(1)
+    assert r.tier == "disk" and r.payload == payloads_1k[1]
+
+
+def test_tier_stack_raises_when_no_tier_serves():
+    stack = TierStack([BucketTier(InMemoryStore({0: b"x"}))])
+    with pytest.raises(StoreError):
+        stack.fetch(99)
+    with pytest.raises(ValueError):
+        TierStack([])
+
+
+def test_tiers_for_store_maps_peer_store(payloads_1k):
+    clock = VirtualClock()
+    bucket = SimulatedBucketStore(payloads_1k, clock=clock)
+    reg = PeerCacheRegistry()
+    reg.register(0, CappedCache())
+    reg.register(1, CappedCache())
+    peer = PeerStore(bucket, reg, node=0, clock=clock)
+    assert [t.name for t in tiers_for_store(peer)] == ["peer", "bucket"]
+    assert [t.name for t in tiers_for_store(bucket)] == ["bucket"]
+
+
+def test_peer_tier_attribution_flows_through_tier_result(payloads_1k):
+    """Acceptance: peer attribution via TierResult, not duck-typed flags."""
+    clock = VirtualClock()
+    bucket = SimulatedBucketStore(payloads_1k, clock=clock)
+    reg = PeerCacheRegistry()
+    mine, theirs = CappedCache(), CappedCache()
+    reg.register(0, mine)
+    reg.register(1, theirs)
+    theirs.put(5, payloads_1k[5])
+    ds = CachingDataset(PeerStore(bucket, reg, node=0, clock=clock), mine)
+    r = ds.get(5)
+    assert r.tier == "peer" and r.peer_hit and not r.hit and r.class_b == 0
+    assert bucket.stats.class_b_requests == 0
+    r = ds.get(6)
+    assert r.tier == "bucket" and not r.peer_hit and r.class_b == 1
+
+
+# ---------------------------------------------------------------------------
+# Spec construction + registry.
+# ---------------------------------------------------------------------------
+def test_spec_validation():
+    w = MNIST.scaled(0.02)
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, source="tape")
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, peer_cache=True)  # needs a cache
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=64, replication_aware_eviction=True)
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=0)
+
+
+def test_spec_sim_config_round_trip():
+    w = MNIST.scaled(0.02)
+    cfg = SimConfig(
+        cache_items=128,
+        prefetch=PrefetchConfig.fifty_fifty(128),
+        peer_cache=True,
+        locality_aware=True,
+        streaming_insert=True,
+    )
+    spec = DataPlaneSpec.from_sim_config(w, cfg, seed=3)
+    assert spec.sampler == "locality" and spec.seed == 3
+    assert spec.to_sim_config() == cfg
+    assert spec.label() == cfg.label()
+
+
+def test_registry_named_conditions():
+    w = MNIST.scaled(0.02)
+    assert {"disk", "gcp-direct", "cache", "cache+peer", "cache+peer+repl",
+            "fifty-fifty", "full-fetch", "locality"} <= set(list_conditions())
+    assert {"partition", "locality"} <= set(list_samplers())
+    spec = condition("cache+peer+repl", w, cache_items=64)
+    assert spec.peer_cache and spec.replication_aware_eviction
+    assert spec.cache_items == 64
+    with pytest.raises(ValueError):
+        condition("no-such-condition", w)
+
+
+def test_spec_runtime_rejects_disk_source():
+    spec = condition("disk", MNIST.scaled(0.02))
+    with pytest.raises(ValueError):
+        spec.build_runtime()
+
+
+# ---------------------------------------------------------------------------
+# Sim/runtime parity (acceptance criterion).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name,kw",
+    [
+        ("cache", dict(cache_items=300)),
+        ("cache", dict(cache_items=-1)),
+        ("gcp-direct", {}),
+        ("cache+peer", dict(cache_items=300)),
+        ("cache+peer+repl", dict(cache_items=250)),
+    ],
+)
+def test_sim_runtime_parity_exact(name, kw):
+    """The same DataPlaneSpec, built via build_sim() and build_runtime() on
+    a deterministic clock with the same seed, yields identical per-tier hit
+    counts and Class B totals for a 2-epoch MNIST-scale run."""
+    spec = condition(name, MNIST.scaled(0.02), **kw)  # 1200 samples, 3 nodes
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_samples == report.runtime_samples
+    assert sum(n for _, _, n in report.sim_samples) == 2 * 1200
+
+
+def test_parity_peer_tier_counts_nonzero():
+    spec = condition("cache+peer", MNIST.scaled(0.02), cache_items=-1)
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_tiers.get("peer", 0) > 0
+    assert report.runtime_tiers.get("peer", 0) > 0
+
+
+def test_parity_rejects_prefetch_specs():
+    spec = condition("fifty-fifty", MNIST.scaled(0.02), cache_items=128)
+    with pytest.raises(ValueError):
+        run_parity(spec)
+
+
+def test_runtime_cluster_prefetch_smoke():
+    """Prefetch-enabled runtime built from a spec runs end-to-end and
+    attributes reads per tier (exact parity is prefetch-free by design;
+    statistical agreement is covered in test_core_sim_and_cost)."""
+    spec = dataclasses.replace(
+        condition("fifty-fifty", MNIST.scaled(0.02), cache_items=128),
+        list_every_fetch=False,
+    )
+    with spec.build_runtime(clock=RealClock(scale=2e-4)) as cluster:
+        stats, store = cluster.run(epochs=2)
+    tiers = aggregate_tier_hits(stats)
+    assert sum(s.samples for s in stats) == 2 * 1200
+    assert tiers.get("ram", 0) > 0  # prefetched rounds produced cache hits
+    assert store.class_b_requests > 0
+    for s in stats:
+        assert s.hits + s.misses == s.samples
+
+
+def test_spec_payload_factory_overrides_runtime_payloads():
+    w = dataclasses.replace(MNIST.scaled(0.02), n_nodes=1)
+    marker = {i: bytes([i % 251]) * 8 for i in range(w.n_samples)}
+    spec = DataPlaneSpec(workload=w, cache_items=-1, payload_factory=lambda s: marker)
+    with spec.build_runtime() as cluster:
+        loader = cluster.loaders[0]
+        loader.set_epoch(0)
+        batch = next(iter(loader))
+    assert batch.payloads[0] == marker[batch.indices[0]]
