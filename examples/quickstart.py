@@ -30,7 +30,10 @@ Migration table — old manual wiring -> the declarative spec:
     #   (hand-rolled per benchmark)               workload, cache_items=512)
 
 The old constructors still work (they are thin shims over the tier stack);
-new code should declare a spec.
+new code should declare a spec.  The same table lives in
+``pydoc repro.pipeline``; start with README.md and docs/ARCHITECTURE.md
+for the layer map, and docs/PARITY.md for the exact sim/runtime agreement
+story (``spec.build_runtime()`` with no clock is the lock-step projection).
 """
 from repro.core import BucketModel, PrefetchConfig, RealClock
 from repro.core.workloads import WorkloadSpec

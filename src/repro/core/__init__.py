@@ -5,7 +5,11 @@ Public API:
     cache:       CappedCache
     policy:      PrefetchConfig (incl. .fifty_fifty / .full_fetch), PrefetchPlanner
     runtime:     PrefetchService, CachingDataset, DeliLoader, run_epochs
-    simulation:  SimConfig, simulate_cluster, NodeSimulator
+    lock-step:   LockstepPrefetchService (deterministic prefetch events,
+                 shared verbatim by the simulator and the lock-step runtime)
+    simulation:  SimConfig, simulate_cluster (event-interleaved cluster
+                 schedule by default; interleaved=False = legacy sequential),
+                 NodeSimulator
     models:      BucketModel, DiskModel, PipelineCostModel (Table-I calibrated)
     cost:        GcpPrices, cost_disk_baseline, cost_bucket, ...
 
@@ -37,6 +41,7 @@ from repro.core.cost import (
 )
 from repro.core.dataset import CachingDataset
 from repro.core.listing_cache import ListingCache
+from repro.core.lockstep import LockstepPrefetchService
 from repro.core.loader import Batch, DeliLoader, run_epochs
 from repro.core.policy import PrefetchConfig, PrefetchPlanner, validate_config_against_cache
 from repro.core.prefetcher import PrefetchService
@@ -45,6 +50,7 @@ from repro.core.sampler import (
     LocalityAwareSampler,
     RandomSampler,
     SequentialSampler,
+    SharedShuffleSampler,
 )
 from repro.core.simulator import NodeSimulator, SimConfig, mean_data_wait, mean_miss_rate, simulate_cluster
 from repro.core.store import (

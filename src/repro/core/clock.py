@@ -6,6 +6,13 @@ against a scaled wall clock (simulated I/O durations shrunk by ``scale`` so a
 "400 second" bucket epoch takes 40 ms of test time while preserving every
 ratio the paper's results depend on), and (c) inside the discrete-event
 simulator against pure virtual time.
+
+Lock-step note (ISSUE 3): the lock-step runtime gives every node its own
+``VirtualClock`` and sleeps the *same component sequence* the simulator
+adds to its scalar time — each hop is one ``_t += seconds`` with identical
+float operands, so the two timelines are bit-equal and the interleaved
+cluster schedules coincide (docs/PARITY.md).  ``advance_to`` is the BSP
+epoch-barrier primitive (monotonic jump, never backwards).
 """
 from __future__ import annotations
 

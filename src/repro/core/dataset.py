@@ -18,17 +18,20 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Callable, Optional, Sequence, Tuple
 
 from repro.core.cache import CappedCache
 from repro.core.store import SampleStore
-from repro.pipeline.tiers import (
-    LOCAL_TIERS,
-    ReadTier,
-    TierStack,
-    local_tiers_for_cache,
-    tiers_for_store,
-)
+
+# Late-bound module reference (not a from-import): ``repro.pipeline.tiers``
+# imports repro.core back, so either package must be importable first.
+# Binding the module object and resolving attributes at call time keeps
+# both entry orders working (``pydoc repro.pipeline`` imports the pipeline
+# package before repro.core has finished initializing).
+import repro.pipeline.tiers as _tiers
+
+if TYPE_CHECKING:
+    from repro.pipeline.tiers import ReadTier
 
 
 @dataclasses.dataclass
@@ -44,7 +47,7 @@ class AccessResult:
     @property
     def hit(self) -> bool:
         """Local-cache hit (the paper's 'cache hit')."""
-        return self.tier in LOCAL_TIERS
+        return self.tier in _tiers.LOCAL_TIERS
 
     @property
     def ram_hit(self) -> bool:
@@ -77,15 +80,15 @@ class CachingDataset:
         self.cache = cache
         self.insert_on_miss = insert_on_miss
         self.transform = transform
-        remote = list(tiers) if tiers is not None else tiers_for_store(store)
-        self.tiers = TierStack(local_tiers_for_cache(cache) + remote)
+        remote = list(tiers) if tiers is not None else _tiers.tiers_for_store(store)
+        self.tiers = _tiers.TierStack(_tiers.local_tiers_for_cache(cache) + remote)
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, index: int) -> AccessResult:
         result = self.tiers.fetch(index)
-        hit = result.tier in LOCAL_TIERS
+        hit = result.tier in _tiers.LOCAL_TIERS
         with self._lock:
             if hit:
                 self.hits += 1

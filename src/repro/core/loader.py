@@ -92,39 +92,85 @@ class DeliLoader:
         # Pre-history checkpoints carry no trajectory: keep whatever this
         # loader already accumulated (documented reset-free behaviour).
 
-    def __iter__(self) -> Iterator[Batch]:
-        stats = EpochStats(epoch=self._epoch, node=self.node)
+    # -- per-sample core (shared by batch iteration + lock-step stepping) ----
+    def _sample_steps(
+        self,
+        stats: EpochStats,
+        pipeline_model=None,
+        compute_per_batch_s: float = 0.0,
+    ):
+        """Process the epoch sample-by-sample, yielding
+        ``(index, AccessResult, data_wait_s, consumed)`` after each access.
+
+        ``pipeline_model`` (a ``PipelineCostModel``) enables *modelled
+        training-loop costs*: after each read, the clock additionally
+        sleeps the RAM-hit latency (local-cache hits) and the per-sample
+        CPU overhead — the exact components, in the exact order, that
+        ``NodeSimulator._access`` adds to its virtual time, so a lock-step
+        runtime's clock trajectory is float-identical to the simulator's.
+        ``compute_per_batch_s`` likewise sleeps the modelled compute after
+        every full batch (inside the step, exactly like the simulator).
+        Both default off, preserving the free-running loader's behaviour of
+        measuring only what the stores really charge.
+        """
         order = list(self.sampler)
         skip = self._resume_cursor
         self._resume_cursor = 0
         planner = PrefetchPlanner(order, self.config)
-        batch_indices: List[int] = []
-        batch_payloads: List[bytes] = []
-        batch_wait = 0.0
-        batch_hits = 0
-        batch_misses = 0
-        evictions_before = self.dataset.cache.stats.evictions if self.dataset.cache else 0
         consumed = 0
+        in_batch = 0
         for idx, round_ in planner:
             if round_ is not None and self.service is not None:
-                self.service.request(round_)
+                self.service.request(round_, stats=stats)
             if consumed < skip:
                 consumed += 1
                 continue  # resuming mid-epoch: rounds still announced above
+            if self.service is not None:
+                # Lock-step completion barrier: fold prefetch rounds that
+                # finished by now (no-op for the free-running service).
+                self.service.advance_to(self.clock.now())
             t0 = self.clock.now()
             result = self.dataset.get(idx)
+            if pipeline_model is not None:
+                if result.tier == "ram":
+                    self.clock.sleep(pipeline_model.ram_hit_s)
+                self.clock.sleep(pipeline_model.cpu_overhead_s)
             dt = self.clock.now() - t0
             consumed += 1
             stats.samples += 1
             stats.record(result.tier)
             stats.data_wait_seconds += dt
+            in_batch += 1
+            if in_batch == self.batch_size:
+                in_batch = 0
+                if compute_per_batch_s:
+                    self.clock.sleep(compute_per_batch_s)
+                    stats.compute_seconds += compute_per_batch_s
+            yield idx, result, dt, consumed
+
+    def _finish_epoch(self, stats: EpochStats, evictions_before: int) -> None:
+        if self.dataset.cache:
+            stats.evictions = self.dataset.cache.stats.evictions - evictions_before
+        self._resume_cursor = 0
+        self.epoch_history.append(stats)
+
+    def __iter__(self) -> Iterator[Batch]:
+        stats = EpochStats(epoch=self._epoch, node=self.node)
+        evictions_before = self.dataset.cache.stats.evictions if self.dataset.cache else 0
+        batch_indices: List[int] = []
+        batch_payloads: List[bytes] = []
+        batch_wait = 0.0
+        batch_hits = 0
+        batch_misses = 0
+        consumed = 0
+        for idx, result, dt, consumed in self._sample_steps(stats):
             batch_wait += dt
+            batch_indices.append(idx)
+            batch_payloads.append(result.payload)
             if result.hit:
                 batch_hits += 1
             else:
                 batch_misses += 1
-            batch_indices.append(idx)
-            batch_payloads.append(result.payload)
             if len(batch_indices) == self.batch_size:
                 self._resume_cursor = consumed
                 yield Batch(batch_indices, batch_payloads, batch_wait, batch_hits, batch_misses)
@@ -133,10 +179,26 @@ class DeliLoader:
         if batch_indices and not self.drop_last:
             self._resume_cursor = consumed
             yield Batch(batch_indices, batch_payloads, batch_wait, batch_hits, batch_misses)
-        if self.dataset.cache:
-            stats.evictions = self.dataset.cache.stats.evictions - evictions_before
-        self._resume_cursor = 0
-        self.epoch_history.append(stats)
+        self._finish_epoch(stats, evictions_before)
+
+    def step_epoch(
+        self, pipeline_model=None, compute_per_batch_s: float = 0.0
+    ) -> Iterator[None]:
+        """Sample-granular epoch driver for a cluster scheduler.
+
+        Each ``next()`` processes exactly one sample access — announcing
+        its fetch round, folding due prefetch completions, reading through
+        the tier stack, and advancing the modelled loop costs — so an
+        event-interleaved driver (``RuntimeCluster.run``) can pick, after
+        every sample, whichever node's clock is earliest.  Exhausting the
+        generator finalizes the epoch into ``epoch_history`` exactly like
+        full-batch iteration.
+        """
+        stats = EpochStats(epoch=self._epoch, node=self.node)
+        evictions_before = self.dataset.cache.stats.evictions if self.dataset.cache else 0
+        for _ in self._sample_steps(stats, pipeline_model, compute_per_batch_s):
+            yield
+        self._finish_epoch(stats, evictions_before)
 
     def __len__(self) -> int:
         n = len(self.sampler)

@@ -1,0 +1,281 @@
+"""Lock-step pre-fetch scheduling: one deterministic service, two hosts.
+
+The paper's pre-fetch service is asynchronous by design — the training loop
+never waits on it — which historically split this repo's two execution
+paths: the discrete-event simulator modelled the service with virtual-time
+event math (``_issue_round``/``_apply_completed_inserts``), while the
+threaded runtime ran a real worker thread whose completion times depend on
+OS scheduling.  Exact sim/runtime parity was therefore *defined away* for
+prefetch-enabled specs (``pipeline.parity`` refused them).
+
+Clairvoyant Prefetching (Dryden et al.) makes the case that reproducible
+I/O claims need *schedule-aware, deterministic* prefetch ordering.  This
+module is that scheduler: ``LockstepPrefetchService`` holds the one
+canonical implementation of the service's event semantics —
+
+  * a fetch round issued at virtual time ``t`` starts at
+    ``max(t, free_at)`` (one service worker, paper §IV-C: a subprocess per
+    request on a 2-vCPU VM is effectively serialized);
+  * round duration is ``max(listing, bulk_get(bucket_keys) + peer_time)``
+    from the calibrated models — the per-round listing is pure Class A
+    accounting traffic that overlaps the parallel GETs;
+  * keys a peer already holds are pulled over the modelled inter-node
+    network (no Class B request billed) — the probe sequence
+    (registry lookup -> holder peek -> record_hit) is the same one the
+    demand path performs;
+  * completions are *events*: inserts are folded into the cache only when
+    ``advance_to(now)`` observes virtual time at/past the round's
+    completion — the well-defined barriers are each sample access (the
+    owner folds before its cache lookup) and, under the event-interleaved
+    cluster scheduler, every scheduler step (peers fold before any node is
+    stepped, so mid-epoch cache state is consistently visible).
+
+Both projections instantiate this class: ``NodeSimulator`` drives it with
+sentinel payloads, the lock-step ``RuntimeCluster`` with real payload bytes
+(``payload_for``).  Because the timing arithmetic, the key partitioning,
+the billing and the insert order are literally the same code, per-tier hit
+counts and Class A/B totals agree *exactly* — no tolerances anywhere (see
+docs/PARITY.md).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import TYPE_CHECKING, Callable, List, Optional, Sequence, Tuple
+
+from repro.core.bandwidth import BucketModel, NetworkModel
+from repro.core.cache import CappedCache
+from repro.core.clock import Clock
+from repro.core.types import EpochStats, StoreStats
+
+if TYPE_CHECKING:  # deferred for the same reason as in core.simulator:
+    # repro.distributed imports repro.core back.
+    from repro.distributed.peer_cache import PeerCacheRegistry
+
+#: Simulator payloads are placeholders; experiments count items, not bytes.
+SENTINEL = b"\x00"
+
+
+def drive_interleaved_epoch(
+    n_nodes: int,
+    now: Callable[[int], float],
+    fold_all: Callable[[float], None],
+    step: Callable[[int], bool],
+    barrier: Callable[[float], None],
+) -> None:
+    """THE event-interleaved cluster schedule for one epoch — a single
+    implementation shared verbatim by the simulator and the lock-step
+    runtime (``pipeline.spec.RuntimeCluster``), so the schedule can never
+    drift between the two projections:
+
+      * event heap keyed by ``(now(rank), rank)`` — the globally-earliest
+        sample access always executes next, ties broken by rank;
+      * before every step, ``fold_all(t)`` applies every node's prefetch
+        completions with time <= t (safe: the heap invariant guarantees
+        every other node's own next access is at >= t);
+      * ``step(rank)`` processes one sample access; False = epoch done for
+        that node (it leaves the heap);
+      * finally the BSP epoch barrier: ``barrier(max(now(r)))``
+        synchronizes all clocks to the slowest node.
+    """
+    heap = [(now(rank), rank) for rank in range(n_nodes)]
+    heapq.heapify(heap)
+    while heap:
+        t, rank = heapq.heappop(heap)
+        fold_all(t)
+        if step(rank):
+            heapq.heappush(heap, (now(rank), rank))
+    barrier(max(now(rank) for rank in range(n_nodes)))
+
+
+class LockstepPrefetchService:
+    """Deterministic pre-fetch service: completions are virtual-time events.
+
+    One instance per node.  The constructor wires the node's calibrated
+    models and sinks; ``issue`` starts a round at an explicit virtual time,
+    ``advance_to`` folds every completed round's inserts into the cache.
+
+    Parameters
+    ----------
+    cache: the node-local capped cache rounds insert into.
+    sample_bytes / n_samples: the workload's object size and dataset size
+        (timing is modelled on the *nominal* sample size, exactly like the
+        simulator — payload bytes only carry content, never timing).
+    bucket / network: calibrated models (Table I defaults upstream).
+    store_stats: the ``StoreStats`` this node's Class A/B requests are
+        billed to (the simulator's per-node accounting, or the runtime
+        bucket store's stats object).
+    payload_for: materializes the payload inserted for a key — the
+        runtime's payload map; ``None`` inserts :data:`SENTINEL` (simulator
+        mode, where caches count items).
+    clock: optional clock backing the :meth:`request` convenience entry
+        point (the runtime's per-node virtual clock).  ``issue`` itself
+        never reads or advances any clock — callers pass ``now`` — so a
+        round's modelled duration costs the training loop nothing.
+    registry / node_id: the cooperative peer-cache directory, when the
+        spec enables the peer tier.
+    """
+
+    def __init__(
+        self,
+        cache: CappedCache,
+        *,
+        sample_bytes: int,
+        n_samples: int,
+        bucket: BucketModel,
+        network: NetworkModel,
+        store_stats: StoreStats,
+        n_connections: int = 16,
+        list_every_fetch: bool = True,
+        streaming_insert: bool = False,
+        payload_for: Optional[Callable[[int], bytes]] = None,
+        clock: Optional[Clock] = None,
+        registry: Optional["PeerCacheRegistry"] = None,
+        node_id: int = 0,
+    ):
+        self.cache = cache
+        self.sample_bytes = sample_bytes
+        self.n_samples = n_samples
+        self.bucket = bucket
+        self.network = network
+        self.store_stats = store_stats
+        self.n_connections = n_connections
+        self.list_every_fetch = list_every_fetch
+        self.streaming_insert = streaming_insert
+        self.payload_for = payload_for
+        self.clock = clock
+        self.registry = registry
+        self.node_id = node_id
+        # Event state: the single worker's availability + pending insert
+        # events, each ``(completion_time, [(key, payload), ...])``.
+        self.free_at = 0.0
+        self.pending: List[Tuple[float, List[Tuple[int, bytes]]]] = []
+        self.rounds = 0
+        self.samples_fetched = 0
+        # Round keys pulled from a peer's cache instead of the bucket.
+        self.peer_fetches = 0
+
+    # -- peer probe (identical sequence to the demand path) ------------------
+    def _peer_probe(self, idx: int) -> bool:
+        """True when a peer's cache can serve ``idx`` right now."""
+        if self.registry is None:
+            return False
+        holder = self.registry.lookup(idx, requester=self.node_id)
+        if holder is None:
+            return False
+        if self.registry.cache_of(holder).peek(idx) is None:
+            return False  # evicted between lookup and read
+        self.registry.record_hit()
+        return True
+
+    def _payload(self, key: int) -> bytes:
+        return SENTINEL if self.payload_for is None else self.payload_for(key)
+
+    # -- event API -----------------------------------------------------------
+    def issue(
+        self, keys: Sequence[int], now: float, stats: Optional[EpochStats] = None
+    ) -> float:
+        """Start one fetch round at virtual time ``now``; returns its
+        completion time.  Class A/B billing happens here (request issue),
+        insertion happens at the completion event (``advance_to``)."""
+        keys = list(keys)
+        start = max(now, self.free_at)
+        listing_s = 0.0
+        if self.list_every_fetch or self.rounds == 0:
+            listing_s = self.bucket.list_seconds(self.n_samples)
+            self.store_stats.class_a_requests += max(
+                1, -(-self.n_samples // self.bucket.page_size)
+            )
+        # Peer tier: keys a peer already holds travel the inter-node network
+        # (sequential RPCs) instead of costing bucket GETs; failed probes pay
+        # the lookup RTT — the same charges as the demand path.
+        bucket_keys = keys
+        peer_s = 0.0
+        if self.registry is not None:
+            bucket_keys = []
+            n_peer = 0
+            for k in keys:
+                if self._peer_probe(k):
+                    n_peer += 1
+                else:
+                    bucket_keys.append(k)
+            peer_s = n_peer * self.network.transfer_seconds(
+                self.sample_bytes
+            ) + len(bucket_keys) * self.network.lookup_seconds()
+            self.peer_fetches += n_peer
+            if stats is not None and n_peer:
+                stats.record("peer", n_peer)
+        # The round's keys are known at issue, so the (naive) per-round
+        # listing proceeds CONCURRENTLY with the parallel GETs — it is pure
+        # Class A accounting traffic, not a serialization point.
+        dur = max(
+            listing_s,
+            self.bucket.bulk_get_seconds(
+                [self.sample_bytes] * len(bucket_keys), self.n_connections
+            )
+            + peer_s,
+        )
+        done = start + dur
+        self.store_stats.class_b_requests += len(bucket_keys)
+        self.store_stats.bytes_read += len(bucket_keys) * self.sample_bytes
+        self.store_stats.read_seconds += dur
+        items = [(k, self._payload(k)) for k in keys]
+        if self.streaming_insert:
+            # Spread inserts uniformly across the round duration (insert
+            # order still matters for FIFO eviction).
+            per = dur / len(keys)
+            for j, item in enumerate(items):
+                self.pending.append((start + per * (j + 1), [item]))
+        else:
+            self.pending.append((done, items))
+        self.free_at = done
+        self.rounds += 1
+        return done
+
+    def advance_to(self, now: float) -> int:
+        """Fold every round completed by virtual time ``now`` into the
+        cache (bulk insert, round order then key order); returns the number
+        of samples inserted.  This is the completion *event* — callers
+        invoke it at the defined barriers (own sample access; every
+        interleaved-scheduler step for peers)."""
+        if not self.pending:
+            return 0
+        inserted = 0
+        remaining: List[Tuple[float, List[Tuple[int, bytes]]]] = []
+        for done, items in self.pending:
+            if done <= now:
+                for k, payload in items:
+                    self.cache.put(k, payload)
+                inserted += len(items)
+            else:
+                remaining.append((done, items))
+        self.pending = remaining
+        self.samples_fetched += inserted
+        return inserted
+
+    # -- runtime-facing conveniences (PrefetchService-shaped) ----------------
+    def request(
+        self, keys: Sequence[int], stats: Optional[EpochStats] = None
+    ) -> float:
+        """Loader entry point: issue a round at the node clock's now."""
+        if self.clock is None:
+            raise ValueError(
+                "request() needs the service constructed with a clock; "
+                "clockless callers (the simulator) use issue(keys, now=...)"
+            )
+        return self.issue(keys, now=self.clock.now(), stats=stats)
+
+    def drain(self, timeout: float = 0.0) -> bool:
+        """No-op: lock-step completions are *events*, folded strictly by
+        ``advance_to`` at the parity barriers — force-completing them here
+        would diverge from the simulator.  Exists for interface symmetry
+        with the threaded ``PrefetchService``."""
+        return True
+
+    def close(self) -> None:
+        """No worker thread to stop; interface symmetry only."""
+
+    def __enter__(self) -> "LockstepPrefetchService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -35,14 +35,21 @@ from __future__ import annotations
 import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor, TimeoutError as FutureTimeout
-from typing import List, Optional, Sequence
+from typing import TYPE_CHECKING, List, Optional, Sequence
 
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock
 from repro.core.listing_cache import ListingCache
 from repro.core.store import SampleStore, SimulatedBucketStore
 from repro.core.types import FetchRequest
-from repro.pipeline.tiers import ReadTier, TierResult, TierStack, tiers_for_store
+
+# Late-bound module reference: repro.pipeline.tiers imports repro.core back;
+# resolving attributes at call time keeps either package importable first
+# (see the matching note in repro.core.dataset).
+import repro.pipeline.tiers as _tiers
+
+if TYPE_CHECKING:
+    from repro.pipeline.tiers import ReadTier, TierResult
 
 
 class PrefetchService:
@@ -56,7 +63,7 @@ class PrefetchService:
         listing_cache: Optional[ListingCache] = None,
         streaming_insert: bool = False,
         hedge_after_s: Optional[float] = None,
-        tiers: Optional[Sequence[ReadTier]] = None,
+        tiers: Optional[Sequence["ReadTier"]] = None,
     ):
         self.store = store
         self.cache = cache
@@ -69,7 +76,9 @@ class PrefetchService:
         # Remote read path for per-key GETs: peer tier (when the store is a
         # PeerStore) then bucket — the same explicit stack the demand path
         # walks past its local cache tiers.
-        self.tiers = TierStack(list(tiers) if tiers is not None else tiers_for_store(store))
+        self.tiers = _tiers.TierStack(
+            list(tiers) if tiers is not None else _tiers.tiers_for_store(store)
+        )
         self.hedges = 0
         self.rounds_completed = 0
         self.samples_fetched = 0
@@ -104,8 +113,14 @@ class PrefetchService:
         self.close()
 
     # -- API used by the Sampler wrapper ------------------------------------
-    def request(self, keys: Sequence[int]) -> FetchRequest:
-        """Announce a fetch round; returns immediately (paper semantics)."""
+    def request(self, keys: Sequence[int], stats=None) -> FetchRequest:
+        """Announce a fetch round; returns immediately (paper semantics).
+
+        ``stats`` (an ``EpochStats``) is accepted for interface symmetry
+        with the deterministic ``repro.core.lockstep`` service and ignored:
+        a free-running worker cannot attribute its peer pulls to an epoch
+        (they are reported on ``peer_fetches`` / ``PeerStore.peer_hits``).
+        """
         if not self._started:
             self.start()
         self._request_counter += 1
@@ -119,6 +134,12 @@ class PrefetchService:
     def drain(self, timeout: float = 120.0) -> bool:
         """Block until all queued rounds are fetched+inserted (tests only)."""
         return self._idle.wait(timeout)
+
+    def advance_to(self, now: float) -> int:
+        """No-op: a free-running worker applies completions on its own
+        schedule.  Interface symmetry with ``LockstepPrefetchService`` so
+        the loader can fold deterministic completions unconditionally."""
+        return 0
 
     # -- worker --------------------------------------------------------------
     def _list_bucket(self) -> None:
@@ -152,7 +173,7 @@ class PrefetchService:
         else:
             payloads_by_key = {}
 
-            def _get(k) -> TierResult:
+            def _get(k) -> "TierResult":
                 return self.tiers.fetch(k)
 
             with ThreadPoolExecutor(max_workers=self.n_connections) as pool:

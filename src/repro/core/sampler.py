@@ -91,6 +91,39 @@ class DistributedPartitionSampler(Sampler):
         return self.partition_size
 
 
+class SharedShuffleSampler(Sampler):
+    """Every node streams the *full* dataset in its own seeded order.
+
+    The paper's experiments partition each epoch (DistributedSampler
+    semantics), so two nodes never touch the same index within one epoch —
+    which makes *same-epoch* cross-node cache effects invisible by
+    construction.  Hoard's setting (Pinto et al.) is the opposite: nodes
+    run IID passes over the whole dataset, so node B routinely wants a
+    sample node A cached minutes ago in the *current* epoch.  This sampler
+    models that regime; it is what the mid-epoch peer-visibility tests (and
+    the event-interleaved scheduler's fidelity claim) exercise.
+
+    The permutation is a pure function of ``(seed, rank, epoch)``: no
+    coordination, deterministic on every node and on both execution paths.
+    """
+
+    def __init__(self, n_samples: int, rank: int, world: int, seed: int = 0):
+        if not (0 <= rank < world):
+            raise ValueError(f"rank {rank} out of range for world {world}")
+        super().__init__(n_samples)
+        self.rank = rank
+        self.world = world
+        self.seed = seed
+
+    @property
+    def partition_size(self) -> int:
+        return self.n_samples  # every node sees everything
+
+    def indices(self) -> List[int]:
+        rng = np.random.default_rng((self.seed, self.rank, self.epoch))
+        return rng.permutation(self.n_samples).tolist()
+
+
 class LocalityAwareSampler(Sampler):
     """Cache-aware epoch partitioning (beyond-paper).
 

@@ -1,31 +1,50 @@
-"""Discrete-event simulator of the DELI node pipeline.
+"""Discrete-event simulator of the DELI cluster, event-interleaved.
 
 Why a simulator: the container has no cloud and no wall-clock budget for
 hundred-second epochs; the paper's results are *timing races* between the
 training loop and the pre-fetch service.  The simulator advances a virtual
 clock through exactly the mechanism the threaded runtime implements — same
 ``PrefetchPlanner`` policy object, same ``CappedCache`` class, same
-calibrated ``BucketModel`` — so its predictions are the runtime's behaviour
-(property-tested against the threaded pipeline in
-tests/test_core_sim_and_cost.py).
+calibrated ``BucketModel``, and (since the lock-step refactor) literally
+the same ``LockstepPrefetchService`` event code — so its predictions are
+the runtime's behaviour, exactly (``pipeline.parity``).
 
-Event structure (single service worker, paper §IV-C: one subprocess per
-request on a 2-vCPU VM => effectively serialized):
+Event structure per node (single service worker, paper §IV-C: one
+subprocess per request on a 2-vCPU VM => effectively serialized):
 
   * the training loop is the driving process: it consumes samples in
     planner order, paying hit/miss latencies and per-batch compute;
   * fetch rounds queue on the service; round r starts at
     max(request time, completion of round r-1), runs for the calibrated
     bulk duration, and bulk-inserts at completion;
-  * cache inserts/evictions are applied lazily: before each lookup, all
-    rounds with completion <= now are folded into the cache.
+  * cache inserts/evictions are events applied at well-defined barriers:
+    before each of the node's own lookups, and — interleaved mode — before
+    every cluster-scheduler step, so *peers* observe them too.
+
+Cluster structure (the tentpole of ISSUE 3): nodes no longer run their
+epochs sequentially.  ``simulate_cluster`` keeps one event heap keyed by
+``(virtual_time, rank)`` and always advances the node whose next sample
+access is earliest, so a peer-cache lookup observes every other node's
+*mid-epoch* cache state — fills and evictions alike — instead of an
+epoch-boundary snapshot (the fidelity gap Hoard's cluster-level results
+highlight, and the old sequential loop's documented bias).  Epoch
+boundaries are BSP barriers: all nodes finish epoch ``e`` before any
+starts ``e+1``, and clocks synchronize to the slowest node (data-parallel
+training synchronizes gradients; the epoch boundary certainly
+synchronizes).  ``interleaved=False`` preserves the legacy sequential
+schedule for A/B comparisons (``benchmarks/fig10_peer_cache.py`` reports
+the delta).
+
+Granularity note: one event = one sample access (with any fetch round it
+triggers).  A step spans several virtual-time components (peer RTT, GET,
+CPU overhead); probes observe cluster state as of the step's start time.
 
 Measured outputs per epoch = the paper's metrics: miss rate, data-wait.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 from repro.core.bandwidth import (
     DEFAULT_BUCKET,
@@ -38,8 +57,13 @@ from repro.core.bandwidth import (
     PipelineCostModel,
 )
 from repro.core.cache import CappedCache
+from repro.core.lockstep import (
+    SENTINEL,
+    LockstepPrefetchService,
+    drive_interleaved_epoch,
+)
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
-from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler
+from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 
@@ -48,7 +72,7 @@ if TYPE_CHECKING:  # runtime import is deferred: repro.core is imported by
     # circular for processes whose first repro import is repro.distributed.
     from repro.distributed.peer_cache import PeerCacheRegistry
 
-_SENTINEL = b"\x00"  # cache payloads are placeholders; experiments count items
+_SENTINEL = SENTINEL  # cache payloads are placeholders; experiments count items
 
 
 @dataclasses.dataclass
@@ -86,15 +110,21 @@ class SimConfig:
         )
 
 
-@dataclasses.dataclass
-class _ServiceState:
-    free_at: float = 0.0
-    pending: List[Tuple[float, List[int]]] = dataclasses.field(default_factory=list)
-    rounds: int = 0
-
-
 class NodeSimulator:
-    """Simulates one node's data plane across epochs (cache persists)."""
+    """Simulates one node's data plane across epochs (cache persists).
+
+    Virtual time advances in exactly the component sequence the lock-step
+    runtime sleeps on its per-node clock (tier latency first, then the
+    modelled training-loop overheads) — same floats, same order — so the
+    two projections' event timelines are bit-identical and the interleaved
+    cluster schedules coincide (see docs/PARITY.md).
+
+    Epochs run through a stepper API so a cluster scheduler can interleave
+    nodes: ``begin_epoch`` installs the epoch's planner, each ``step``
+    processes one sample access (plus any fetch round it triggers), and
+    ``finish_epoch`` returns the epoch's ``EpochStats``.  ``run_epoch``
+    wraps the three for single-node use.
+    """
 
     def __init__(
         self,
@@ -114,14 +144,36 @@ class NodeSimulator:
         self.network = network
         self.node_id = node_id
         self.t = 0.0
+        # Mirror of RuntimeCluster's ``insert_on_miss``: the demand path
+        # inserts into the cache exactly when no *active* pre-fetch service
+        # owns population (paper §IV-B vs §IV-C) — a present-but-disabled
+        # PrefetchConfig counts as inactive on both projections.
+        self._insert_on_miss = not (cfg.prefetch is not None and cfg.prefetch.enabled)
         self.store_stats = StoreStats()
         self.cache: Optional[CappedCache] = None
+        self.service: Optional[LockstepPrefetchService] = None
         if cfg.cache_items is not None:
             max_items = None if cfg.cache_items == -1 else cfg.cache_items
             self.cache = CappedCache(max_items=max_items)
-        self.service = _ServiceState()
+            self.service = LockstepPrefetchService(
+                self.cache,
+                sample_bytes=spec.sample_bytes,
+                n_samples=spec.n_samples,
+                bucket=bucket,
+                network=network,
+                store_stats=self.store_stats,
+                n_connections=cfg.n_connections,
+                list_every_fetch=cfg.list_every_fetch,
+                streaming_insert=cfg.streaming_insert,
+                node_id=node_id,
+            )
         # Cooperative peer-cache tier (set by simulate_cluster / tests).
         self.registry: Optional["PeerCacheRegistry"] = None
+        # Epoch-in-progress state (stepper API).
+        self._stats: Optional[EpochStats] = None
+        self._planner_iter = None
+        self._samples_in_batch = 0
+        self._evictions_before = 0
 
     def join_peer_registry(self, registry: "PeerCacheRegistry") -> None:
         """Register this node's cache in the cluster-wide directory."""
@@ -129,6 +181,8 @@ class NodeSimulator:
             raise ValueError("peer cache tier needs a local cache (cache_items)")
         registry.register(self.node_id, self.cache)
         self.registry = registry
+        if self.service is not None:
+            self.service.registry = registry
 
     def _peer_fetch(self, idx: int) -> bool:
         """Try to serve ``idx`` from a peer's cache; returns hit/miss."""
@@ -146,132 +200,134 @@ class NodeSimulator:
     def _sequential_get_s(self) -> float:
         return self.bucket.get_seconds(self.spec.sample_bytes)
 
-    def _bulk_get_s(self, n: int) -> float:
-        return self.bucket.bulk_get_seconds(
-            [self.spec.sample_bytes] * n, self.cfg.n_connections
-        )
+    # -- events --------------------------------------------------------------
+    def fold_inserts_until(self, t: float) -> None:
+        """Apply this node's prefetch completions with time <= ``t``.
 
-    # -- service -------------------------------------------------------------
-    def _issue_round(self, keys: List[int], stats: Optional[EpochStats] = None) -> None:
-        start = max(self.t, self.service.free_at)
-        listing_s = 0.0
-        if self.cfg.list_every_fetch or self.service.rounds == 0:
-            listing_s = self.bucket.list_seconds(self.spec.n_samples)
-            self.store_stats.class_a_requests += max(
-                1, -(-self.spec.n_samples // self.bucket.page_size)
-            )
-        # Peer-cache tier: the pre-fetch service pulls keys a peer already
-        # holds over the inter-node network (sequential RPCs) instead of
-        # issuing bucket GETs for them — no Class B request billed.
-        bucket_keys = keys
-        peer_s = 0.0
-        if self.registry is not None:
-            bucket_keys = []
-            n_peer = 0
-            for k in keys:
-                if self._peer_fetch(k):
-                    n_peer += 1
-                else:
-                    bucket_keys.append(k)
-            # Peer hits pay the transfer (RTT + streaming); failed probes
-            # pay the lookup RTT — same charges as the demand path.
-            peer_s = n_peer * self.network.transfer_seconds(
-                self.spec.sample_bytes
-            ) + len(bucket_keys) * self.network.lookup_seconds()
-            if stats is not None and n_peer:
-                stats.record("peer", n_peer)
-        # The round's keys are known when it is issued, so the (naive)
-        # per-round listing proceeds CONCURRENTLY with the parallel GETs —
-        # it is pure Class A accounting traffic, not a serialization point.
-        dur = max(listing_s, self._bulk_get_s(len(bucket_keys)) + peer_s)
-        done = start + dur
-        self.store_stats.class_b_requests += len(bucket_keys)
-        self.store_stats.bytes_read += len(bucket_keys) * self.spec.sample_bytes
-        self.store_stats.read_seconds += dur
-        if self.cfg.streaming_insert:
-            # Spread inserts uniformly across the round duration.
-            per = dur / len(keys)
-            for j, k in enumerate(keys):
-                self.service.pending.append((start + per * (j + 1), [k]))
-        else:
-            self.service.pending.append((done, list(keys)))
-        self.service.free_at = done
-        self.service.rounds += 1
-
-    def _apply_completed_inserts(self) -> None:
-        assert self.cache is not None
-        remaining = []
-        for done, keys in self.service.pending:
-            if done <= self.t:
-                for k in keys:
-                    self.cache.put(k, _SENTINEL)
-            else:
-                remaining.append((done, keys))
-        self.service.pending = remaining
+        The interleaved cluster scheduler calls this on *every* node before
+        stepping any of them, so a peer probing this cache observes rounds
+        that completed (in virtual time) even while this node sits between
+        its own accesses.  Safe because the scheduler only steps the
+        globally-earliest node: this node's own next access is at >= t, so
+        it would have folded these completions itself by then anyway.
+        """
+        if self.service is not None:
+            self.service.advance_to(t)
 
     # -- sample access -------------------------------------------------------
     def _access(self, idx: int, stats: EpochStats) -> None:
-        pipeline = self.pipeline
-        wait = pipeline.cpu_overhead_s
+        """One sample read: advance ``t`` through the same component
+        sequence the lock-step runtime sleeps (tier latency, then modelled
+        loop overheads), so both timelines are float-identical."""
+        t0 = self.t
         if self.cfg.source == "disk":
             # Disk-source baseline: no cache tier at all; every read is a
-            # (local-disk) miss — no tier recorded, misses are derived.
-            wait += self.disk.get_seconds(self.spec.sample_bytes)
+            # local-disk access — a distinct source tier, never a local
+            # *cache* hit (misses stay derived as samples - local hits).
+            self.t += self.disk.get_seconds(self.spec.sample_bytes)
+            stats.record("disk-source")
         elif self.cache is None:
             # Direct-from-bucket baseline: sequential fallback GET.
-            wait += self._sequential_get_s()
+            self.t += self._sequential_get_s()
             stats.record("bucket")
             self.store_stats.class_b_requests += 1
             self.store_stats.bytes_read += self.spec.sample_bytes
         else:
-            self._apply_completed_inserts()
+            assert self.service is not None
+            self.service.advance_to(self.t)  # fold completed rounds (barrier)
             if self.cache.get(idx) is not None:
                 # Sim caches are RAM-only (sentinel payloads, no spill).
-                wait += pipeline.ram_hit_s
+                self.t += self.pipeline.ram_hit_s
                 stats.record("ram")
             elif self._peer_fetch(idx):
                 # Local miss served by a peer's cache over the inter-node
                 # network: RTT + streaming, no Class B request.
-                wait += self.network.transfer_seconds(self.spec.sample_bytes)
+                self.t += self.network.transfer_seconds(self.spec.sample_bytes)
                 stats.record("peer")
-                if self.cfg.prefetch is None:
+                if self._insert_on_miss:
                     self.cache.put(idx, _SENTINEL)
             else:
                 if self.registry is not None:
-                    wait += self.network.lookup_seconds()  # failed peer probe
-                wait += self._sequential_get_s()
+                    self.t += self.network.lookup_seconds()  # failed peer probe
+                self.t += self._sequential_get_s()
                 stats.record("bucket")
                 self.store_stats.class_b_requests += 1
                 self.store_stats.bytes_read += self.spec.sample_bytes
-                if self.cfg.prefetch is None:
+                if self._insert_on_miss:
                     # Cache-only mode inserts on miss (paper §IV-B); with a
                     # pre-fetch service the worker does not (§IV-C).
                     self.cache.put(idx, _SENTINEL)
-        self.t += wait
+        self.t += self.pipeline.cpu_overhead_s
         stats.samples += 1
-        stats.data_wait_seconds += wait
+        stats.data_wait_seconds += self.t - t0
 
-    # -- epoch ----------------------------------------------------------------
-    def run_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> EpochStats:
-        stats = EpochStats(epoch=epoch, node=node)
-        ev0 = self.cache.stats.evictions if self.cache else 0
+    # -- epoch stepper -------------------------------------------------------
+    def begin_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> None:
+        """Install one epoch's sample order; drive with :meth:`step`."""
+        assert self._stats is None, "finish the current epoch first"
+        self._stats = EpochStats(epoch=epoch, node=node)
+        self._evictions_before = self.cache.stats.evictions if self.cache else 0
         pf = self.cfg.prefetch if self.cfg.prefetch is not None else PrefetchConfig.disabled()
         if self.cfg.source == "disk" or self.cache is None:
             pf = PrefetchConfig.disabled()
-        planner = PrefetchPlanner(order, pf)
-        samples_in_batch = 0
-        for idx, round_ in planner:
-            if round_ is not None:
-                self._issue_round(list(round_), stats)
-            self._access(idx, stats)
-            samples_in_batch += 1
-            if samples_in_batch == self.spec.batch_size:
-                self.t += self.spec.compute_per_batch_s
-                stats.compute_seconds += self.spec.compute_per_batch_s
-                samples_in_batch = 0
+        self._planner_iter = iter(PrefetchPlanner(order, pf))
+        self._samples_in_batch = 0
+
+    def step(self) -> bool:
+        """Process one sample access (issuing its fetch round first, and
+        per-batch compute after); False when the epoch is exhausted."""
+        assert self._stats is not None and self._planner_iter is not None
+        try:
+            idx, round_ = next(self._planner_iter)
+        except StopIteration:
+            return False
+        if round_ is not None:
+            assert self.service is not None
+            self.service.issue(list(round_), now=self.t, stats=self._stats)
+        self._access(idx, self._stats)
+        self._samples_in_batch += 1
+        if self._samples_in_batch == self.spec.batch_size:
+            self.t += self.spec.compute_per_batch_s
+            self._stats.compute_seconds += self.spec.compute_per_batch_s
+            self._samples_in_batch = 0
+        return True
+
+    def finish_epoch(self) -> EpochStats:
+        assert self._stats is not None
+        stats = self._stats
         if self.cache:
-            stats.evictions = self.cache.stats.evictions - ev0
+            stats.evictions = self.cache.stats.evictions - self._evictions_before
+        self._stats = None
+        self._planner_iter = None
         return stats
+
+    def run_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> EpochStats:
+        """Run one whole epoch on this node alone (no interleaving)."""
+        self.begin_epoch(epoch, order, node=node)
+        while self.step():
+            pass
+        return self.finish_epoch()
+
+
+def _build_samplers(spec: WorkloadSpec, cfg: SimConfig, seed: int) -> List[Sampler]:
+    """Legacy sampler construction from a SimConfig (specs pass their own)."""
+    samplers: List[Sampler] = []
+    for rank in range(spec.n_nodes):
+        if cfg.locality_aware:
+            samplers.append(
+                LocalityAwareSampler(
+                    spec.n_samples,
+                    rank,
+                    spec.n_nodes,
+                    seed=seed,
+                    peer_aware=cfg.peer_cache,
+                )
+            )
+        else:
+            samplers.append(
+                DistributedPartitionSampler(spec.n_samples, rank, spec.n_nodes, seed=seed)
+            )
+    return samplers
 
 
 def simulate_cluster(
@@ -283,19 +339,36 @@ def simulate_cluster(
     disk: DiskModel = DEFAULT_DISK,
     pipeline: PipelineCostModel = DEFAULT_PIPELINE,
     network: NetworkModel = DEFAULT_NETWORK,
+    interleaved: bool = True,
+    samplers: Optional[Sequence[Sampler]] = None,
 ) -> Tuple[List[EpochStats], StoreStats]:
     """Run all nodes of the paper's setup for N epochs; returns per-node
-    per-epoch stats + aggregate store accounting.
+    per-epoch stats (rank order within each epoch) + aggregate store
+    accounting.
 
     With ``cfg.peer_cache`` every node's cache joins one
     ``PeerCacheRegistry``; a node's local miss is first offered to its
-    peers' caches over the modelled inter-node network.  Nodes still run
-    their epochs sequentially (as before), so a rank-r node sees ranks < r
-    at their post-current-epoch cache state and ranks > r at the previous
-    epoch boundary.  The bias is mixed relative to concurrently-running
-    nodes: same-epoch fills from lower ranks are visible early (optimistic)
-    while capped caches' same-epoch evictions are also visible early
-    (pessimistic); an event-interleaved cluster sim is a ROADMAP item.
+    peers' caches over the modelled inter-node network.
+
+    ``interleaved=True`` (default): one event heap over all nodes, keyed by
+    ``(virtual_time, rank)``; the globally-earliest sample access always
+    executes next and every node folds its completed prefetch rounds before
+    each scheduler step, so peer lookups observe *mid-epoch* cache state —
+    same-epoch fills and evictions alike.  Epoch boundaries are BSP
+    barriers (clocks sync to the slowest node).  Prefetch-free nodes that
+    never interact (no peer tier) produce results identical to the
+    sequential schedule; with prefetching, the epoch barrier can nudge
+    cross-epoch round timing (a fast node's clock jumps to the barrier, so
+    a straddling round completes relatively earlier).
+
+    ``interleaved=False``: the legacy sequential schedule — a rank-r node
+    sees ranks < r at their post-current-epoch cache state and ranks > r at
+    the previous epoch boundary (the bias documented in PR 1; kept for A/B
+    comparison, see ``benchmarks/fig10_peer_cache.py``).
+
+    ``samplers`` overrides per-rank sample orders (``DataPlaneSpec`` passes
+    registry-built samplers so both execution paths share them verbatim);
+    default builds from ``cfg.locality_aware``.
     """
     nodes = [
         NodeSimulator(spec, cfg, bucket, disk, pipeline, network, node_id=rank)
@@ -312,34 +385,50 @@ def simulate_cluster(
         )
         for node in nodes:
             node.join_peer_registry(registry)
-    samplers: List = []
-    for rank in range(spec.n_nodes):
-        if cfg.locality_aware:
-            samplers.append(
-                LocalityAwareSampler(
-                    spec.n_samples,
-                    rank,
-                    spec.n_nodes,
-                    seed=seed,
-                    peer_aware=cfg.peer_cache,
-                )
-            )
-        else:
-            samplers.append(
-                DistributedPartitionSampler(spec.n_samples, rank, spec.n_nodes, seed=seed)
-            )
+    if samplers is None:
+        samplers = _build_samplers(spec, cfg, seed)
+    samplers = list(samplers)
+    if len(samplers) != spec.n_nodes:
+        raise ValueError(f"need {spec.n_nodes} samplers, got {len(samplers)}")
+    locality = [s for s in samplers if hasattr(s, "update_cache_views")]
     all_stats: List[EpochStats] = []
     for e in range(epochs):
-        if cfg.locality_aware:
+        if locality:
             if registry is not None:
                 views = registry.cache_views()  # ordered by node id == rank
             else:
                 views = [n.cache.keys() if n.cache else [] for n in nodes]
-            for s in samplers:
+            for s in locality:
                 s.update_cache_views(views)
         for rank, (node, sampler) in enumerate(zip(nodes, samplers)):
             sampler.set_epoch(e)
-            all_stats.append(node.run_epoch(e, sampler.indices(), node=rank))
+            node.begin_epoch(e, sampler.indices(), node=rank)
+        if interleaved:
+            # The one shared schedule implementation (repro.core.lockstep):
+            # earliest-access-first event heap, fold-before-step completion
+            # barriers, BSP epoch barrier.
+
+            def _fold_all(t: float) -> None:
+                for n in nodes:  # completion events <= t are visible to all
+                    n.fold_inserts_until(t)
+
+            def _barrier(t: float) -> None:
+                for n in nodes:
+                    n.t = t
+
+            drive_interleaved_epoch(
+                len(nodes),
+                now=lambda rank: nodes[rank].t,
+                fold_all=_fold_all,
+                step=lambda rank: nodes[rank].step(),
+                barrier=_barrier,
+            )
+        else:
+            for node in nodes:
+                while node.step():
+                    pass
+        for node in nodes:
+            all_stats.append(node.finish_epoch())
     agg = StoreStats()
     for n in nodes:
         agg = agg.merge(n.store_stats)

@@ -26,6 +26,16 @@ Consistency note: caches are keyed by (session, index) and entries are
 immutable once inserted (payloads are content-addressed by dataset index),
 so serving a peer's copy can never return stale data — eviction races
 simply degrade to a bucket fallback.
+
+Visibility note (ISSUE 3): what a ``lookup`` *observes* depends on the
+cluster schedule.  Under the event-interleaved scheduler (the default for
+both execution paths) a probe sees every peer's **mid-epoch** cache state —
+same-epoch fills and evictions alike — because all nodes advance through
+one virtual-time event queue and fold their pre-fetch completions before
+any node is stepped.  The legacy sequential schedule
+(``interleaved=False``) froze peers at epoch boundaries, which overstated
+this tier for capped caches; ``benchmarks/fig10_peer_cache.py`` reports
+the delta.
 """
 from __future__ import annotations
 

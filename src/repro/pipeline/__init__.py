@@ -1,19 +1,48 @@
 """repro.pipeline — the declarative data-plane layer.
 
-Two abstractions (ISSUE 2 tentpole):
+Two abstractions:
 
   * ``tiers``    — the composable read-tier stack (``ReadTier`` protocol,
-    ``RamTier``/``DiskTier``/``PeerTier``/``BucketTier``, ``TierStack``):
-    the explicit form of the paper's layered read path, with per-tier
-    attribution (``TierResult``) replacing ad-hoc duck-typing.
+    ``RamTier``/``DiskTier``/``PeerTier``/``BucketTier``/``DiskSourceTier``,
+    ``TierStack``): the explicit form of the paper's layered read path,
+    with per-tier attribution (``TierResult``) replacing ad-hoc
+    duck-typing.
   * ``spec``     — ``DataPlaneSpec``: one declarative description of a data
     plane (store backend, tier sizes, prefetch policy, sampler, peer cache,
-    cluster shape) with ``build_sim()`` and ``build_runtime()``, so the
-    discrete-event simulator and the threaded runtime are two projections
-    of the same object instead of two hand-synchronized assemblies.
+    cluster schedule) with ``build_sim()`` and ``build_runtime()``, so the
+    discrete-event simulator and the (lock-step or threaded) runtime are
+    two projections of the same object instead of two hand-synchronized
+    assemblies.
 
 Plus ``registry`` (named benchmark conditions / samplers) and ``parity``
-(the sim-vs-runtime agreement harness).
+(the sim-vs-runtime **exact** agreement harness — per-tier hits, Class A/B
+totals and data-wait compared with ``==``; prefetch-enabled specs
+included, see docs/PARITY.md).
+
+Migrating from the seed-era constructors — old manual wiring vs the spec::
+
+    old (hand-assembled)                      new (DataPlaneSpec)
+    ----------------------------------------  -------------------------------
+    SimulatedBucketStore(payloads, model,     spec = DataPlaneSpec(workload=,
+        clock=...)                                bucket=model,
+    CappedCache(max_items=N)                      cache_items=N,
+    PrefetchConfig.fifty_fifty(N)                 prefetch=PrefetchConfig
+    PrefetchService(store, cache, ...)                .fifty_fifty(N),
+    CachingDataset(store, cache,                  payload_factory=...)
+        insert_on_miss=...)
+    DistributedPartitionSampler(n, r, w)      cluster = spec.build_runtime()
+    DeliLoader(dataset, sampler, batch,       loader = cluster.loaders[rank]
+        cfg, service, clock)
+    # simulator: SimConfig(...) +             stats, store = spec.build_sim()
+    #   simulate_cluster(spec, cfg)               .run(epochs=2)
+    # peer tier: PeerCacheRegistry +          DataPlaneSpec(peer_cache=True)
+    #   PeerStore(bucket, reg, node)
+    # named conditions:                       pipeline.condition("cache+peer",
+    #   (hand-rolled per benchmark)               workload, cache_items=512)
+
+The old constructors still work (they are thin shims over the tier stack);
+new code should declare a spec.  ``examples/quickstart.py`` is the
+runnable version of this table.
 
 ``tiers`` is imported eagerly (it is a dependency of ``repro.core``'s
 dataset/prefetcher); the spec layer is exposed lazily (PEP 562) because it
@@ -23,6 +52,7 @@ imports ``repro.core`` back — eager import here would cycle during
 from repro.pipeline.tiers import (  # noqa: F401
     LOCAL_TIERS,
     BucketTier,
+    DiskSourceTier,
     DiskTier,
     PeerTier,
     RamTier,
@@ -47,6 +77,7 @@ _PARITY_EXPORTS = ("ParityReport", "run_parity", "assert_parity")
 __all__ = [
     "LOCAL_TIERS",
     "BucketTier",
+    "DiskSourceTier",
     "DiskTier",
     "PeerTier",
     "RamTier",

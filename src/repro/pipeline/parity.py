@@ -1,83 +1,115 @@
-"""Sim-vs-runtime parity harness.
+"""Sim-vs-runtime parity harness: exact by construction, never by tolerance.
 
 The whole point of ``DataPlaneSpec`` is that the discrete-event simulator
-and the threaded runtime are projections of one description.  For
-*deterministic* specs — no asynchronous pre-fetch service racing the
-training loop — the two projections must agree **exactly** on everything
-that is a pure function of cache-state evolution:
+and the lock-step runtime are projections of one description.  Both walk
+the same ``CappedCache``/``PrefetchPlanner``/``PeerCacheRegistry`` state
+machines, share the literal ``repro.core.lockstep`` pre-fetch event code,
+and advance virtual time through the same float operations in the same
+order — so everything that is a function of cache-state evolution must
+agree **exactly**:
 
-  * per-tier hit counts (ram / peer / bucket), aggregated over the run;
-  * total Class B requests issued to the bucket;
-  * per-(epoch, node) sample counts.
+  * per-tier hit counts (ram / disk / peer / bucket / disk-source),
+    aggregated over the run;
+  * total Class A (listing) and Class B (GET) requests billed;
+  * per-(epoch, node) sample counts **and data-wait seconds** (bit-equal
+    floats, not approximately-equal ones).
 
-``assert_parity`` checks exactly that on a ``VirtualClock``.  Specs with
-prefetching enabled are rejected: the threaded service's completion times
-depend on OS scheduling, so agreement there is *statistical* (covered by
-``tests/test_core_sim_and_cost.py::test_sim_vs_threaded_runtime_miss_rate_agreement``),
-not exact — refusing loudly beats a flaky assertion.
+``assert_parity`` checks exactly that, driving ``build_runtime()`` in its
+default lock-step mode.  Since the lock-step scheduler landed, specs with
+**prefetching enabled are in scope**: service completions are virtual-time
+events drained at defined barriers on both projections, so the old
+"the async service races the loop" escape hatch is gone — and so is the
+temptation to paper over drift with tolerances.  A tolerance would turn
+every future scheduling bug into a silently absorbed error; refusing to
+have one keeps the parity suite a tripwire (docs/PARITY.md tells the whole
+story).
+
+Statistical agreement between the simulator and the *free-running threaded*
+runtime (real worker threads, OS scheduling) remains a separate, weaker
+property, covered by
+``tests/test_core_sim_and_cost.py::test_sim_vs_threaded_runtime_miss_rate_agreement``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Tuple
 
-from repro.core.clock import VirtualClock
 from repro.core.types import aggregate_tier_hits
 from repro.pipeline.spec import DataPlaneSpec
 
 
 @dataclasses.dataclass
 class ParityReport:
+    """Side-by-side accounting of one spec's two projections.
+
+    ``exact`` is the parity property; ``describe()`` renders the
+    comparison for assertion messages and docs."""
+
     spec_label: str
     epochs: int
     sim_tiers: Dict[str, int]
     runtime_tiers: Dict[str, int]
+    sim_class_a: int
+    runtime_class_a: int
     sim_class_b: int
     runtime_class_b: int
-    sim_samples: List[Tuple[int, int, int]]  # (epoch, node, samples)
-    runtime_samples: List[Tuple[int, int, int]]
+    # (epoch, node, samples, data_wait_seconds) per node-epoch.
+    sim_samples: List[Tuple[int, int, int, float]]
+    runtime_samples: List[Tuple[int, int, int, float]]
 
     @property
     def exact(self) -> bool:
         return (
             self.sim_tiers == self.runtime_tiers
+            and self.sim_class_a == self.runtime_class_a
             and self.sim_class_b == self.runtime_class_b
             and self.sim_samples == self.runtime_samples
         )
 
     def describe(self) -> str:
         status = "EXACT" if self.exact else "DIVERGED"
-        return (
-            f"parity[{self.spec_label}, {self.epochs} epochs]: {status}\n"
-            f"  tiers   sim={self.sim_tiers} runtime={self.runtime_tiers}\n"
-            f"  class B sim={self.sim_class_b} runtime={self.runtime_class_b}"
-        )
+        lines = [
+            f"parity[{self.spec_label}, {self.epochs} epochs]: {status}",
+            f"  tiers   sim={self.sim_tiers} runtime={self.runtime_tiers}",
+            f"  class A sim={self.sim_class_a} runtime={self.runtime_class_a}",
+            f"  class B sim={self.sim_class_b} runtime={self.runtime_class_b}",
+        ]
+        if self.sim_samples != self.runtime_samples:
+            for s, r in zip(self.sim_samples, self.runtime_samples):
+                if s != r:
+                    lines.append(f"  node-epoch sim={s} runtime={r}")
+        return "\n".join(lines)
 
 
 def run_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
-    """Build both projections of ``spec`` and compare their accounting."""
-    if spec.prefetch is not None and spec.prefetch.enabled:
-        raise ValueError(
-            "exact parity is defined for deterministic specs only; disable "
-            "prefetching (the async service races the loop by design — use "
-            "the statistical agreement test for prefetch-enabled specs)"
-        )
+    """Build both projections of ``spec`` and compare their accounting.
+
+    Prefetch-enabled specs are fully supported: the runtime is the
+    lock-step projection (``build_runtime()`` with no clock), whose
+    pre-fetch completions are deterministic virtual-time events."""
     sim_stats, sim_store = spec.build_sim().run(epochs=epochs)
-    with spec.build_runtime(clock=VirtualClock()) as cluster:
+    with spec.build_runtime() as cluster:
         run_stats, run_store = cluster.run(epochs=epochs)
     return ParityReport(
         spec_label=spec.label(),
         epochs=epochs,
         sim_tiers=aggregate_tier_hits(sim_stats),
         runtime_tiers=aggregate_tier_hits(run_stats),
+        sim_class_a=sim_store.class_a_requests,
+        runtime_class_a=run_store.class_a_requests,
         sim_class_b=sim_store.class_b_requests,
         runtime_class_b=run_store.class_b_requests,
-        sim_samples=[(s.epoch, s.node, s.samples) for s in sim_stats],
-        runtime_samples=[(s.epoch, s.node, s.samples) for s in run_stats],
+        sim_samples=[
+            (s.epoch, s.node, s.samples, s.data_wait_seconds) for s in sim_stats
+        ],
+        runtime_samples=[
+            (s.epoch, s.node, s.samples, s.data_wait_seconds) for s in run_stats
+        ],
     )
 
 
 def assert_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
+    """Assert the two projections agree exactly; returns the report."""
     report = run_parity(spec, epochs=epochs)
     assert report.exact, report.describe()
     return report

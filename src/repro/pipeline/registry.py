@@ -11,15 +11,27 @@ fifty-fifty / full-fetch) and the beyond-paper tiers (cache+peer,
 cache+peer+repl, locality).  Third parties extend via
 ``@register_condition("my-condition")``.
 
-Samplers are registered the same way ("partition", "locality") so
-``DataPlaneSpec.sampler`` stays a plain string.
+Samplers are registered the same way so ``DataPlaneSpec.sampler`` stays a
+plain string:
+
+  * ``"partition"``      — the paper's DistributedSampler semantics (a new
+    seeded global permutation per epoch, strided slice per node);
+  * ``"locality"``       — cache-aware partitioning (beyond-paper);
+  * ``"shared-shuffle"`` — every node streams the full dataset in its own
+    order (the Hoard-style regime where *same-epoch* cross-node cache
+    visibility matters; exercised by the interleaved-scheduler tests).
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, List
 
 from repro.core.policy import PrefetchConfig
-from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
+from repro.core.sampler import (
+    DistributedPartitionSampler,
+    LocalityAwareSampler,
+    Sampler,
+    SharedShuffleSampler,
+)
 from repro.core.workloads import WorkloadSpec
 from repro.pipeline.spec import DataPlaneSpec
 
@@ -63,6 +75,12 @@ register_sampler(
     "locality",
     lambda *, n_samples, rank, world, seed, peer_aware: LocalityAwareSampler(
         n_samples, rank, world, seed=seed, peer_aware=peer_aware
+    ),
+)
+register_sampler(
+    "shared-shuffle",
+    lambda *, n_samples, rank, world, seed, peer_aware: SharedShuffleSampler(
+        n_samples, rank, world, seed=seed
     ),
 )
 

@@ -15,14 +15,24 @@ shape: one pipeline description drives both the performance *model* and the
         run_stats, run_store = cluster.run(epochs=2)
 
 Both projections share the spec's sampler seeds, tier sizes, policy object
-and calibrated models, so the parity harness (``repro.pipeline.parity``)
-can assert they agree on a deterministic clock — the drift the ROADMAP's
-"concurrent-node simulation" item warns about becomes a tested property
-instead of a hope.
+and calibrated models.  ``build_runtime()`` (no clock argument) assembles
+the **lock-step runtime**: per-node virtual clocks, the deterministic
+``repro.core.lockstep`` pre-fetch service, and an event-interleaved driver
+that mirrors the simulator's cluster schedule step for step — so
+``pipeline.parity.assert_parity`` proves the two projections agree
+*exactly* (per-tier hits, Class A/B totals, per-sample data-wait), with
+prefetching **enabled or not**.  Pass ``clock=RealClock(scale=...)`` for
+the free-running threaded runtime (real worker threads racing the loop —
+timing experiments, statistical agreement only).
+
+See ``docs/ARCHITECTURE.md`` for the layer map and
+``docs/PARITY.md`` for why parity is exact-by-construction.
 """
 from __future__ import annotations
 
 import dataclasses
+import shutil
+import tempfile
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.bandwidth import (
@@ -39,23 +49,49 @@ from repro.core.cache import CappedCache
 from repro.core.clock import Clock, VirtualClock
 from repro.core.dataset import CachingDataset
 from repro.core.loader import DeliLoader
+from repro.core.lockstep import LockstepPrefetchService, drive_interleaved_epoch
 from repro.core.policy import PrefetchConfig
 from repro.core.prefetcher import PrefetchService
 from repro.core.simulator import SimConfig, simulate_cluster
-from repro.core.store import SimulatedBucketStore, make_synthetic_payloads
+from repro.core.store import (
+    FileSystemStore,
+    SimulatedBucketStore,
+    make_synthetic_payloads,
+)
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
+from repro.pipeline.tiers import DiskSourceTier
 
 
 @dataclasses.dataclass(frozen=True)
 class DataPlaneSpec:
     """One experimental condition, declaratively.
 
-    ``sampler`` is a name resolved through ``repro.pipeline.registry``
-    ("partition" = the paper's DistributedSampler semantics, "locality" =
-    the beyond-paper cache-aware partitioner), so benchmark conditions can
-    be declared entirely by name.
+    Core fields
+    -----------
+    workload: the dataset/cluster shape (``repro.core.workloads``).
+    source: ``"bucket"`` (simulated GCS) or ``"disk"`` (the paper's
+        local-disk baseline; materialized through ``FileSystemStore`` on
+        the runtime path).
+    cache_items: node-local capped cache size in samples; ``None`` = no
+        cache, ``-1`` = unlimited.
+    prefetch: a ``PrefetchConfig`` (``None`` = no pre-fetch service).
+    sampler: a name resolved through ``repro.pipeline.registry``
+        ("partition" = the paper's DistributedSampler semantics,
+        "locality" = the cache-aware partitioner, "shared-shuffle" = every
+        node streams the full dataset in its own order), so benchmark
+        conditions can be declared entirely by name.
+    peer_cache / replication_aware_eviction: PR 1's cooperative peer tier
+        and its Hoard-style eviction guard.
+    interleaved: cluster schedule fidelity.  ``True`` (default) runs both
+        projections event-interleaved — peer lookups observe *mid-epoch*
+        cache state; ``False`` keeps the legacy sequential node schedule
+        (epoch-boundary snapshots) for A/B comparisons.
+
+    Construction helpers: ``from_sim_config`` lifts a legacy ``SimConfig``;
+    ``repro.pipeline.condition(name, workload)`` builds registered
+    conditions by name.
     """
 
     workload: WorkloadSpec
@@ -68,6 +104,7 @@ class DataPlaneSpec:
     sampler: str = "partition"
     peer_cache: bool = False
     replication_aware_eviction: bool = False
+    interleaved: bool = True
     seed: int = 0
     # Calibrated models (Table I defaults; override for fast-forwarded runs).
     bucket: BucketModel = DEFAULT_BUCKET
@@ -90,6 +127,7 @@ class DataPlaneSpec:
 
     # -- naming ---------------------------------------------------------------
     def label(self) -> str:
+        """Human-readable condition label (same scheme as ``SimConfig``)."""
         return self.to_sim_config().label()
 
     # -- projections ----------------------------------------------------------
@@ -127,19 +165,42 @@ class DataPlaneSpec:
             **overrides,
         )
 
+    def build_samplers(self) -> List:
+        """One registry-built sampler per rank — the *same* construction on
+        both projections, so sample orders agree verbatim."""
+        from repro.pipeline.registry import make_sampler  # lazy: registry imports spec
+
+        w = self.workload
+        return [
+            make_sampler(
+                self.sampler,
+                n_samples=w.n_samples,
+                rank=rank,
+                world=w.n_nodes,
+                seed=self.seed,
+                peer_aware=self.peer_cache,
+            )
+            for rank in range(w.n_nodes)
+        ]
+
     def build_sim(self) -> "SimCluster":
         """The discrete-event projection (virtual time, no threads)."""
         return SimCluster(self)
 
     def build_runtime(self, clock: Optional[Clock] = None) -> "RuntimeCluster":
-        """The threaded-runtime projection (real stores, loaders, services).
+        """The runtime projection (real stores, loaders, services).
 
-        Default clock is a ``VirtualClock`` so modelled I/O costs no wall
-        time; pass ``RealClock(scale=...)`` for timing-race experiments.
+        With no ``clock`` (default) this is the **lock-step runtime**:
+        per-node ``VirtualClock``s, the deterministic lock-step pre-fetch
+        service, and modelled training-loop costs — exactly parity-
+        comparable to ``build_sim()``.  Pass a clock (e.g.
+        ``RealClock(scale=...)``) for the free-running threaded runtime
+        (one shared clock, real worker threads, timing races).
         """
         return RuntimeCluster(self, clock=clock)
 
     def build_payloads(self) -> Dict[int, bytes]:
+        """The runtime's payload map (synthetic unless ``payload_factory``)."""
         if self.payload_factory is not None:
             return self.payload_factory(self)
         return make_synthetic_payloads(
@@ -155,6 +216,8 @@ class SimCluster:
         self.config = spec.to_sim_config()
 
     def run(self, epochs: int = 2) -> Tuple[List[EpochStats], StoreStats]:
+        """Simulate every node for N epochs; returns per-node per-epoch
+        stats (rank order within each epoch) + aggregate store accounting."""
         return simulate_cluster(
             self.spec.workload,
             self.config,
@@ -164,88 +227,150 @@ class SimCluster:
             disk=self.spec.disk,
             pipeline=self.spec.pipeline_model,
             network=self.spec.network,
+            interleaved=self.spec.interleaved,
+            samplers=self.spec.build_samplers(),
         )
 
 
 class RuntimeCluster:
-    """``DataPlaneSpec`` -> per-node threaded pipelines over one dataset.
+    """``DataPlaneSpec`` -> per-node real pipelines over one dataset.
 
     Mirrors ``simulate_cluster``'s structure: one (store, cache, dataset,
     sampler, loader[, service]) per node, all caches joined to one
-    ``PeerCacheRegistry`` when the spec asks for the peer tier.  ``run``
-    drives nodes' epochs in the same (epoch-outer, rank-inner) order as the
-    simulator so cache/peer visibility matches and parity is well-defined.
+    ``PeerCacheRegistry`` when the spec asks for the peer tier.
+
+    Two modes:
+
+    * **Lock-step** (``clock=None``, the default): each node gets its own
+      ``VirtualClock`` and — when prefetching — a deterministic
+      ``LockstepPrefetchService`` whose completions are virtual-time
+      events.  ``run`` drives the loaders sample-by-sample with the same
+      event-interleaved schedule (or the legacy sequential schedule, per
+      ``spec.interleaved``) and the same modelled loop costs as the
+      simulator, so both projections produce *identical* accounting
+      (``pipeline.parity``).
+    * **Free-running** (explicit ``clock``): the original threaded
+      assembly — a shared clock, a real ``PrefetchService`` worker thread
+      per node, epochs driven rank-by-rank.  Timing races are real;
+      agreement with the simulator is statistical.
+
+    The disk source materializes the dataset into a temporary directory
+    through ``FileSystemStore`` (cleaned up by ``close``); disk conditions
+    have no cache/prefetch/peer tier on either projection, mirroring the
+    paper's baseline.
     """
 
     def __init__(self, spec: DataPlaneSpec, clock: Optional[Clock] = None):
-        if spec.source != "bucket":
-            raise ValueError(
-                "build_runtime supports the bucket source; the disk baseline "
-                "is simulator-only (no local dataset files in this container)"
-            )
-        from repro.pipeline.registry import make_sampler  # lazy: registry imports spec
-
         self.spec = spec
-        self.clock: Clock = clock if clock is not None else VirtualClock()
+        self.lockstep = clock is None
         w = spec.workload
+        # Per-node clocks: fresh VirtualClocks in lock-step mode, the one
+        # shared clock in free-running mode.
+        self.clock: Optional[Clock] = clock
+        self.clocks: List[Clock] = [
+            VirtualClock() if self.lockstep else clock for _ in range(w.n_nodes)
+        ]
         payloads = spec.build_payloads()
-        prefetch_on = spec.prefetch is not None and spec.prefetch.enabled
+        self._payloads = payloads
+        self._disk_root: Optional[str] = None
+        prefetch_on = (
+            spec.source == "bucket"
+            and spec.prefetch is not None
+            and spec.prefetch.enabled
+        )
         self.registry: Optional[PeerCacheRegistry] = (
             PeerCacheRegistry(replication_aware=spec.replication_aware_eviction)
-            if spec.peer_cache
+            if spec.peer_cache and spec.source == "bucket"
             else None
         )
         self.buckets: List[SimulatedBucketStore] = []
+        self.disks: List[FileSystemStore] = []
         self.caches: List[Optional[CappedCache]] = []
-        self.samplers: List = []
-        self.services: List[Optional[PrefetchService]] = []
+        self.samplers: List = spec.build_samplers()
+        self.services: List = []
         self.loaders: List[DeliLoader] = []
+        if spec.source == "disk":
+            # Materialize the dataset once; every node reads the same files
+            # (the paper's disk baseline: data staged on each VM's disk).
+            self._disk_root = tempfile.mkdtemp(prefix="deli-disk-")
+            FileSystemStore.write_dataset(self._disk_root, payloads)
         for rank in range(w.n_nodes):
-            bucket = SimulatedBucketStore(payloads, model=spec.bucket, clock=self.clock)
-            cache: Optional[CappedCache] = None
-            if spec.cache_items is not None:
-                max_items = None if spec.cache_items == -1 else spec.cache_items
-                cache = CappedCache(max_items=max_items)
-            store = bucket
-            if self.registry is not None:
-                assert cache is not None  # enforced by spec validation
-                self.registry.register(rank, cache)
-                store = PeerStore(
-                    bucket, self.registry, node=rank, network=spec.network, clock=self.clock
+            node_clock = self.clocks[rank]
+            if spec.source == "disk":
+                disk_store = FileSystemStore(
+                    self._disk_root,
+                    model=spec.disk,
+                    clock=node_clock,
+                    simulate_timing=True,
                 )
-            dataset = CachingDataset(store, cache, insert_on_miss=not prefetch_on)
-            service = None
-            if prefetch_on:
-                if cache is None:
-                    raise ValueError("prefetching requires a cache (cache_items)")
-                service = PrefetchService(
-                    store,
-                    cache,
-                    n_connections=spec.n_connections,
-                    clock=self.clock,
-                    list_every_fetch=spec.list_every_fetch,
-                    streaming_insert=spec.streaming_insert,
+                self.disks.append(disk_store)
+                # Disk baseline: no cache tier at all (mirrors the
+                # simulator), so the stack is the bare disk-source tier.
+                dataset = CachingDataset(
+                    disk_store, None, tiers=[DiskSourceTier(disk_store)]
                 )
-            sampler = make_sampler(
-                spec.sampler,
-                n_samples=w.n_samples,
-                rank=rank,
-                world=w.n_nodes,
-                seed=spec.seed,
-                peer_aware=spec.peer_cache,
-            )
+                cache = None
+                service = None
+            else:
+                bucket = SimulatedBucketStore(
+                    payloads, model=spec.bucket, clock=node_clock
+                )
+                self.buckets.append(bucket)
+                cache = None
+                if spec.cache_items is not None:
+                    max_items = None if spec.cache_items == -1 else spec.cache_items
+                    cache = CappedCache(max_items=max_items)
+                store = bucket
+                if self.registry is not None:
+                    assert cache is not None  # enforced by spec validation
+                    self.registry.register(rank, cache)
+                    store = PeerStore(
+                        bucket,
+                        self.registry,
+                        node=rank,
+                        network=spec.network,
+                        clock=node_clock,
+                    )
+                dataset = CachingDataset(store, cache, insert_on_miss=not prefetch_on)
+                service = None
+                if prefetch_on:
+                    if cache is None:
+                        raise ValueError("prefetching requires a cache (cache_items)")
+                    if self.lockstep:
+                        service = LockstepPrefetchService(
+                            cache,
+                            sample_bytes=w.sample_bytes,
+                            n_samples=w.n_samples,
+                            bucket=spec.bucket,
+                            network=spec.network,
+                            store_stats=bucket.stats,
+                            n_connections=spec.n_connections,
+                            list_every_fetch=spec.list_every_fetch,
+                            streaming_insert=spec.streaming_insert,
+                            payload_for=payloads.__getitem__,
+                            clock=node_clock,
+                            registry=self.registry,
+                            node_id=rank,
+                        )
+                    else:
+                        service = PrefetchService(
+                            store,
+                            cache,
+                            n_connections=spec.n_connections,
+                            clock=node_clock,
+                            list_every_fetch=spec.list_every_fetch,
+                            streaming_insert=spec.streaming_insert,
+                        )
             loader = DeliLoader(
                 dataset,
-                sampler,
+                self.samplers[rank],
                 batch_size=w.batch_size,
                 config=spec.prefetch if prefetch_on else PrefetchConfig.disabled(),
                 service=service,
-                clock=self.clock,
+                clock=node_clock,
                 node=rank,
             )
-            self.buckets.append(bucket)
             self.caches.append(cache)
-            self.samplers.append(sampler)
             self.services.append(service)
             self.loaders.append(loader)
 
@@ -254,6 +379,9 @@ class RuntimeCluster:
         for svc in self.services:
             if svc is not None:
                 svc.close()
+        if self._disk_root is not None:
+            shutil.rmtree(self._disk_root, ignore_errors=True)
+            self._disk_root = None
 
     def __enter__(self) -> "RuntimeCluster":
         return self
@@ -272,12 +400,57 @@ class RuntimeCluster:
         for s in self.samplers:
             s.update_cache_views(views)
 
-    def run(
-        self, epochs: int = 2, compute: bool = False
-    ) -> Tuple[List[EpochStats], StoreStats]:
-        """Drive every node for N epochs (epoch-outer, rank-inner, exactly
-        like ``simulate_cluster``); returns per-node per-epoch stats plus
-        the aggregate bucket request accounting."""
+    def _run_lockstep(self, epochs: int) -> List[EpochStats]:
+        """Sample-granular deterministic drive, mirroring the simulator's
+        cluster schedule exactly: the same event heap (interleaved) or the
+        same rank-sequential order, the same fold-before-step completion
+        barriers, the same BSP epoch barrier."""
+        w = self.spec.workload
+        all_stats: List[EpochStats] = []
+        for e in range(epochs):
+            self._update_locality_views()
+            steppers = []
+            for loader in self.loaders:
+                loader.set_epoch(e)
+                steppers.append(
+                    loader.step_epoch(
+                        pipeline_model=self.spec.pipeline_model,
+                        compute_per_batch_s=w.compute_per_batch_s,
+                    )
+                )
+            if self.spec.interleaved:
+                # The one shared schedule implementation
+                # (repro.core.lockstep.drive_interleaved_epoch) — the same
+                # heap/fold/barrier code the simulator runs.
+                done = object()
+
+                def _fold_all(t: float) -> None:
+                    for svc in self.services:  # completion events <= t are
+                        if svc is not None:  # visible to every node
+                            svc.advance_to(t)
+
+                def _barrier(t: float) -> None:
+                    for c in self.clocks:
+                        c.advance_to(t)
+
+                drive_interleaved_epoch(
+                    w.n_nodes,
+                    now=lambda rank: self.clocks[rank].now(),
+                    fold_all=_fold_all,
+                    step=lambda rank: next(steppers[rank], done) is not done,
+                    barrier=_barrier,
+                )
+            else:
+                for stepper in steppers:
+                    for _ in stepper:
+                        pass
+            for loader in self.loaders:
+                assert loader.last_epoch_stats is not None
+                all_stats.append(loader.last_epoch_stats)
+        return all_stats
+
+    def _run_threaded(self, epochs: int, compute: bool) -> List[EpochStats]:
+        """Free-running drive (epoch-outer, rank-inner, real services)."""
         w = self.spec.workload
         all_stats: List[EpochStats] = []
         for e in range(epochs):
@@ -286,15 +459,36 @@ class RuntimeCluster:
                 loader.set_epoch(e)
                 for _ in loader:
                     if compute:
+                        assert self.clock is not None
                         self.clock.sleep(w.compute_per_batch_s)
                 assert loader.last_epoch_stats is not None
                 all_stats.append(loader.last_epoch_stats)
             for svc in self.services:
                 if svc is not None:
                     svc.drain()
-        return all_stats, self.store_stats()
+        return all_stats
+
+    def run(
+        self, epochs: int = 2, compute: bool = False
+    ) -> Tuple[List[EpochStats], StoreStats]:
+        """Drive every node for N epochs; returns per-node per-epoch stats
+        (rank order within each epoch) plus the aggregate bucket request
+        accounting.
+
+        Lock-step mode always models per-batch compute and loop overheads
+        (they shape the event schedule); free-running mode sleeps compute
+        only when ``compute=True`` (legacy behaviour).
+        """
+        if self.lockstep:
+            stats = self._run_lockstep(epochs)
+        else:
+            stats = self._run_threaded(epochs, compute)
+        return stats, self.store_stats()
 
     def store_stats(self) -> StoreStats:
+        """Aggregate *bucket* accounting (Class A/B, bytes).  Disk-source
+        runs return zeros — local disk reads are not object-store requests
+        (matching the simulator's disk baseline)."""
         agg = StoreStats()
         for bucket in self.buckets:
             agg = agg.merge(bucket.stats)

@@ -139,6 +139,30 @@ class BucketTier:
         )
 
 
+class DiskSourceTier:
+    """The paper's local-disk *source* baseline (not the cache spill tier).
+
+    Wraps a ``FileSystemStore`` holding the materialized dataset.  Reads
+    are attributed to tier ``"disk-source"`` — deliberately outside
+    ``LOCAL_TIERS``, because the disk baseline has no cache at all: every
+    access counts as a miss (miss rate 1.0), matching the simulator's
+    disk-source accounting.  No Class B request is billed (local disk is
+    not object storage)."""
+
+    name = "disk-source"
+
+    def __init__(self, store: SampleStore):
+        self.store = store
+
+    def lookup(self, index: int) -> Optional[TierResult]:
+        t0 = self.store.clock.now()
+        payload = self.store.get(index)
+        dt = self.store.clock.now() - t0
+        return TierResult(
+            payload, self.name, class_b=0, nbytes=len(payload), seconds=dt
+        )
+
+
 class TierStack:
     """Ordered composition of read tiers — the node's whole read path."""
 

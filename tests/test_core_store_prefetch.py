@@ -269,8 +269,8 @@ class _SynchronousService(PrefetchService):
     announcing call returns (removes the thread-scheduling race so Class B
     accounting is exact on a virtual clock)."""
 
-    def request(self, keys):
-        req = super().request(keys)
+    def request(self, keys, stats=None):
+        req = super().request(keys, stats=stats)
         assert self.drain(timeout=30)
         return req
 

@@ -141,10 +141,19 @@ def test_registry_named_conditions():
         condition("no-such-condition", w)
 
 
-def test_spec_runtime_rejects_disk_source():
+def test_spec_disk_source_runs_on_both_paths():
+    """ISSUE 3 satellite: the disk baseline materializes through
+    FileSystemStore and runs (and agrees exactly) on the runtime path too."""
     spec = condition("disk", MNIST.scaled(0.02))
-    with pytest.raises(ValueError):
-        spec.build_runtime()
+    report = assert_parity(spec, epochs=1)
+    assert report.sim_tiers == {"disk-source": 1200}
+    assert report.sim_class_b == 0  # local disk is not object storage
+    with spec.build_runtime() as cluster:
+        root = cluster._disk_root
+        assert root is not None
+    import os
+
+    assert not os.path.exists(root)  # close() cleans the materialized files
 
 
 # ---------------------------------------------------------------------------
@@ -161,13 +170,62 @@ def test_spec_runtime_rejects_disk_source():
     ],
 )
 def test_sim_runtime_parity_exact(name, kw):
-    """The same DataPlaneSpec, built via build_sim() and build_runtime() on
-    a deterministic clock with the same seed, yields identical per-tier hit
-    counts and Class B totals for a 2-epoch MNIST-scale run."""
+    """The same DataPlaneSpec, built via build_sim() and build_runtime()
+    (lock-step, per-node virtual clocks) with the same seed, yields
+    identical per-tier hit counts, Class A/B totals, and per-node-epoch
+    sample counts AND data-wait seconds for a 2-epoch MNIST-scale run."""
     spec = condition(name, MNIST.scaled(0.02), **kw)  # 1200 samples, 3 nodes
     report = assert_parity(spec, epochs=2)
     assert report.sim_samples == report.runtime_samples
-    assert sum(n for _, _, n in report.sim_samples) == 2 * 1200
+    assert sum(n for _, _, n, _ in report.sim_samples) == 2 * 1200
+
+
+@pytest.mark.parametrize(
+    "name,kw",
+    [
+        ("fifty-fifty", dict(cache_items=128)),
+        ("full-fetch", dict(fetch_size=128)),
+        ("cache+peer", dict(cache_items=300, prefetch=PrefetchConfig.fifty_fifty(300))),
+        (
+            "cache+peer+repl",
+            dict(cache_items=250, prefetch=PrefetchConfig.fifty_fifty(250)),
+        ),
+    ],
+)
+def test_sim_runtime_parity_exact_with_prefetch(name, kw):
+    """ISSUE 3 acceptance: exact parity now extends to prefetch-ENABLED
+    specs — the lock-step scheduler turns service completions into
+    deterministic virtual-time events on both projections.  No tolerances:
+    per-tier hits, Class A/B, and data-wait are compared with ==."""
+    spec = condition(name, MNIST.scaled(0.02), **kw)
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_tiers.get("ram", 0) > 0  # prefetch produced cache hits
+    if spec.peer_cache:
+        # Service-side peer pulls are attributed to epochs identically.
+        assert report.sim_tiers.get("peer", 0) > 0
+
+
+def test_parity_prefetch_streaming_insert_and_listing_cache():
+    spec = dataclasses.replace(
+        condition("fifty-fifty", MNIST.scaled(0.02), cache_items=128),
+        streaming_insert=True,
+        list_every_fetch=False,
+    )
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_class_a == report.runtime_class_a
+
+
+def test_parity_with_disabled_prefetch_config_is_exact():
+    """Regression: a present-but-disabled PrefetchConfig must behave like
+    no prefetch on BOTH projections (the demand path inserts on miss), not
+    diverge — the sim used to gate inserts on ``prefetch is None`` while
+    the runtime checked ``.enabled``."""
+    spec = dataclasses.replace(
+        condition("cache", MNIST.scaled(0.02), cache_items=300),
+        prefetch=PrefetchConfig.disabled(),
+    )
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_tiers.get("ram", 0) > 0  # miss-inserts produced hits
 
 
 def test_parity_peer_tier_counts_nonzero():
@@ -175,12 +233,6 @@ def test_parity_peer_tier_counts_nonzero():
     report = assert_parity(spec, epochs=2)
     assert report.sim_tiers.get("peer", 0) > 0
     assert report.runtime_tiers.get("peer", 0) > 0
-
-
-def test_parity_rejects_prefetch_specs():
-    spec = condition("fifty-fifty", MNIST.scaled(0.02), cache_items=128)
-    with pytest.raises(ValueError):
-        run_parity(spec)
 
 
 def test_runtime_cluster_prefetch_smoke():

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Link-check the documentation surface (CI docs lane).
+
+Scans README.md and docs/*.md for intra-repo references and fails on any
+that point at files or directories that do not exist:
+
+  * inline markdown links  [text](target)  whose target is not an
+    external URL or pure anchor;
+  * inline-code path mentions (`path/to/file.py`) that look like repo
+    paths (contain a slash and an extension or trailing slash).
+
+No third-party dependencies — runnable anywhere Python is.  Exit status 0
+when every reference resolves, 1 otherwise (one line per broken link).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH = re.compile(r"`([A-Za-z0-9_.~/\-]+/[A-Za-z0-9_.\-]+)`")
+EXTERNAL = ("http://", "https://", "mailto:")
+# Inline-code mentions are only treated as paths when they end with a known
+# file extension or a slash — `repro.pipeline` or `a/b` pseudo-paths in
+# prose stay prose.
+PATH_SUFFIXES = (".py", ".md", ".json", ".yml", ".yaml", ".txt", ".ini", "/")
+
+
+def doc_files() -> list:
+    docs = [REPO / "README.md"]
+    docs.extend(sorted((REPO / "docs").glob("*.md")))
+    return [d for d in docs if d.exists()]
+
+
+def targets_in(text: str):
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        yield target.split("#", 1)[0], "link"
+    for m in CODE_PATH.finditer(text):
+        target = m.group(1)
+        if target.endswith(PATH_SUFFIXES):
+            yield target.rstrip("/"), "code-path"
+
+
+def check() -> list:
+    """Returns a list of 'file: broken target' strings (empty = clean)."""
+    broken = []
+    for doc in doc_files():
+        text = doc.read_text(encoding="utf-8")
+        for target, kind in targets_in(text):
+            if not target:
+                continue
+            resolved = (doc.parent / target) if not target.startswith("/") else None
+            if resolved is None:
+                broken.append(f"{doc.relative_to(REPO)}: absolute path {target!r}")
+                continue
+            # Links resolve relative to the doc; code-path mentions are
+            # written repo-relative by convention.
+            if kind == "code-path":
+                resolved = REPO / target
+            if not resolved.exists():
+                broken.append(
+                    f"{doc.relative_to(REPO)}: {kind} -> {target!r} does not exist"
+                )
+    return broken
+
+
+def main() -> int:
+    docs = doc_files()
+    if not docs:
+        print("no documentation files found", file=sys.stderr)
+        return 1
+    broken = check()
+    for line in broken:
+        print(f"BROKEN  {line}", file=sys.stderr)
+    print(f"checked {len(docs)} docs: {'OK' if not broken else f'{len(broken)} broken'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
