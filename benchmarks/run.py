@@ -23,6 +23,7 @@ MODULES = [
     "fig8_thresholds",
     "fig9_best_settings",
     "fig10_peer_cache",
+    "fig11_stragglers",
     "table2_cost",
     "beyond_paper",
     "roofline_report",

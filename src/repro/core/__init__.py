@@ -23,10 +23,13 @@ from repro.core.bandwidth import (
     DEFAULT_DISK,
     DEFAULT_NETWORK,
     DEFAULT_PIPELINE,
+    DEFAULT_PROFILE,
     BucketModel,
     DiskModel,
     NetworkModel,
+    NodeProfile,
     PipelineCostModel,
+    straggler_profiles,
 )
 from repro.core.cache import CappedCache
 from repro.core.clock import RealClock, VirtualClock
@@ -41,7 +44,13 @@ from repro.core.cost import (
 )
 from repro.core.dataset import CachingDataset
 from repro.core.listing_cache import ListingCache
-from repro.core.lockstep import LockstepPrefetchService
+from repro.core.lockstep import (
+    STEP_BATCH_END,
+    STEP_CONTINUE,
+    STEP_DONE,
+    LockstepPrefetchService,
+    SubstepAccess,
+)
 from repro.core.loader import Batch, DeliLoader, run_epochs
 from repro.core.policy import PrefetchConfig, PrefetchPlanner, validate_config_against_cache
 from repro.core.prefetcher import PrefetchService

@@ -114,6 +114,12 @@ class NetworkModel:
         conservative)."""
         return self.rtt_s
 
+    def stream_seconds(self, size_bytes: int) -> float:
+        """Payload streaming time *after* the probe round trip — the second
+        half of ``transfer_seconds`` when the sub-step schedule charges the
+        probe RTT (``lookup_seconds``) as its own event first."""
+        return size_bytes / self.bw
+
 
 @dataclasses.dataclass(frozen=True)
 class PipelineCostModel:
@@ -129,6 +135,90 @@ class PipelineCostModel:
     ram_hit_s: float = 0.05e-3
     # Disk-tier cache hit: one small read from the local cache spill.
     disk_hit_s: float = 0.4e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeProfile:
+    """Per-node heterogeneity: multiplicative *time* scales (straggler knobs).
+
+    The paper's 3-VM cluster is homogeneous, but real data-parallel jobs are
+    not: NoPFS's per-step I/O traces show stragglers dominating distributed
+    training I/O, and the per-batch allreduce schedule exists precisely to
+    model them.  A profile slows one node down deterministically:
+
+      * ``compute``   — multiplies CPU-side times (per-batch compute, the
+        per-sample decode/collate overhead, and cache-hit service times);
+      * ``bandwidth`` — multiplies I/O times (bucket GET latency and
+        streaming, disk reads, inter-node network RTT and streaming).
+
+    1.0 = the calibrated baseline; 2.0 = twice as slow.  Scaling is applied
+    by *rebuilding the calibrated models* (``scale_bucket`` etc.), so both
+    execution projections evaluate the identical scaled floats and exact
+    parity holds for straggler specs too.  Multiplying by 1.0 is a bitwise
+    no-op for IEEE-754 finite values, so default profiles leave every
+    existing timeline bit-for-bit unchanged.
+    """
+
+    compute: float = 1.0
+    bandwidth: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.compute <= 0 or self.bandwidth <= 0:
+            raise ValueError("NodeProfile multipliers must be positive")
+
+    def scale_bucket(self, model: BucketModel) -> BucketModel:
+        b = self.bandwidth
+        return dataclasses.replace(
+            model,
+            request_latency_s=model.request_latency_s * b,
+            per_connection_bw=model.per_connection_bw / b,
+            listing_latency_s=model.listing_latency_s * b,
+        )
+
+    def scale_disk(self, model: DiskModel) -> DiskModel:
+        b = self.bandwidth
+        return dataclasses.replace(
+            model,
+            effective_bw=model.effective_bw / b,
+            seek_latency_s=model.seek_latency_s * b,
+        )
+
+    def scale_network(self, model: NetworkModel) -> NetworkModel:
+        b = self.bandwidth
+        return dataclasses.replace(model, rtt_s=model.rtt_s * b, bw=model.bw / b)
+
+    def scale_pipeline(self, model: PipelineCostModel) -> PipelineCostModel:
+        c = self.compute
+        return dataclasses.replace(
+            model,
+            cpu_overhead_s=model.cpu_overhead_s * c,
+            ram_hit_s=model.ram_hit_s * c,
+            disk_hit_s=model.disk_hit_s * c,
+        )
+
+    def batch_compute_s(self, compute_per_batch_s: float) -> float:
+        """This node's per-batch compute time (straggler-scaled)."""
+        return compute_per_batch_s * self.compute
+
+
+DEFAULT_PROFILE = NodeProfile()
+
+
+def straggler_profiles(
+    n_nodes: int,
+    slow_ranks: tuple = (0,),
+    compute: float = 2.0,
+    bandwidth: float = 2.0,
+) -> tuple:
+    """A cluster profile with ``slow_ranks`` slowed by the given factors —
+    the canonical straggler scenario (``pipeline.registry`` condition
+    ``"straggler"``, ``benchmarks/fig11_stragglers.py``)."""
+    return tuple(
+        NodeProfile(compute=compute, bandwidth=bandwidth)
+        if rank in slow_ranks
+        else NodeProfile()
+        for rank in range(n_nodes)
+    )
 
 
 DEFAULT_BUCKET = BucketModel()

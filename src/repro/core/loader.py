@@ -20,10 +20,19 @@ import numpy as np
 
 from repro.core.clock import Clock, RealClock
 from repro.core.dataset import CachingDataset
+from repro.core.lockstep import (
+    STEP_BATCH_END,
+    STEP_CONTINUE,
+    SubstepAccess,
+)
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.prefetcher import PrefetchService
 from repro.core.sampler import Sampler
 from repro.core.types import EpochStats
+
+#: Internal marker yielded by ``_sample_steps`` for a sub-step phase (a
+#: time component that is its own scheduler event, not a finished sample).
+_PHASE = object()
 
 
 @dataclasses.dataclass
@@ -65,6 +74,11 @@ class DeliLoader:
         self.epoch_history: List[EpochStats] = []
         self._epoch = 0
         self._resume_cursor = 0  # sample offset within the epoch (checkpointing)
+        # The epoch-in-progress stats object (set while _sample_steps runs,
+        # kept after epoch finalization): the cluster scheduler's allreduce
+        # barriers account blocked time into it via sync_to(), including
+        # the epoch-end barrier that fires after the stepper is exhausted.
+        self._active_stats: Optional[EpochStats] = None
 
     def set_epoch(self, epoch: int) -> None:
         self._epoch = epoch
@@ -98,9 +112,13 @@ class DeliLoader:
         stats: EpochStats,
         pipeline_model=None,
         compute_per_batch_s: float = 0.0,
+        substep: Optional[SubstepAccess] = None,
     ):
         """Process the epoch sample-by-sample, yielding
-        ``(index, AccessResult, data_wait_s, consumed)`` after each access.
+        ``(index, AccessResult, data_wait_s, consumed, batch_end)`` after
+        each access (``batch_end`` = this sample completed a gradient
+        batch), with bare ``_PHASE`` markers in between at sub-step
+        granularity.
 
         ``pipeline_model`` (a ``PipelineCostModel``) enables *modelled
         training-loop costs*: after each read, the clock additionally
@@ -112,41 +130,69 @@ class DeliLoader:
         every full batch (inside the step, exactly like the simulator).
         Both default off, preserving the free-running loader's behaviour of
         measuring only what the stores really charge.
+
+        ``substep`` (a ``repro.core.lockstep.SubstepAccess``) replaces the
+        tier-stack read with the shared sub-step state machine: each time
+        component yields ``_PHASE`` so the cluster scheduler can interleave
+        other nodes' events inside this access (mirroring the simulator's
+        sub-step decomposition exactly — the machine IS the same object
+        type running the same generator).
+
+        Mid-epoch resume (ISSUE 4 bugfix): gradient batches are a property
+        of the epoch's *sample order*, not of the resume point — the batch
+        counter starts at ``skip % batch_size`` so a cursor inside a batch
+        completes that partial batch (and reaches its allreduce barrier) at
+        the true epoch boundary instead of re-spanning a full batch from
+        the resume point; and re-announced rounds are flagged ``replay``
+        so the pre-fetch service skips the keys it already fetched — and
+        billed — before the checkpoint (no re-issued Class B GETs, no
+        re-billed per-round listing).
         """
         order = list(self.sampler)
         skip = self._resume_cursor
         self._resume_cursor = 0
         planner = PrefetchPlanner(order, self.config)
         consumed = 0
-        in_batch = 0
+        in_batch = skip % self.batch_size
+        self._active_stats = stats
         for idx, round_ in planner:
+            replaying = consumed < skip
             if round_ is not None and self.service is not None:
-                self.service.request(round_, stats=stats)
-            if consumed < skip:
+                self.service.request(round_, stats=stats, replay=replaying)
+            if replaying:
                 consumed += 1
                 continue  # resuming mid-epoch: rounds still announced above
-            if self.service is not None:
-                # Lock-step completion barrier: fold prefetch rounds that
-                # finished by now (no-op for the free-running service).
-                self.service.advance_to(self.clock.now())
-            t0 = self.clock.now()
-            result = self.dataset.get(idx)
-            if pipeline_model is not None:
-                if result.tier == "ram":
-                    self.clock.sleep(pipeline_model.ram_hit_s)
-                self.clock.sleep(pipeline_model.cpu_overhead_s)
-            dt = self.clock.now() - t0
-            consumed += 1
-            stats.samples += 1
-            stats.record(result.tier)
-            stats.data_wait_seconds += dt
+            if substep is not None:
+                for _ in substep.run(idx, stats):
+                    yield _PHASE  # one time component = one scheduler event
+                result = None
+                dt = 0.0  # accounted inside the shared sub-step machine
+                consumed += 1
+            else:
+                if self.service is not None:
+                    # Lock-step completion barrier: fold prefetch rounds that
+                    # finished by now (no-op for the free-running service).
+                    self.service.advance_to(self.clock.now())
+                t0 = self.clock.now()
+                result = self.dataset.get(idx)
+                if pipeline_model is not None:
+                    if result.tier == "ram":
+                        self.clock.sleep(pipeline_model.ram_hit_s)
+                    self.clock.sleep(pipeline_model.cpu_overhead_s)
+                dt = self.clock.now() - t0
+                consumed += 1
+                stats.samples += 1
+                stats.record(result.tier)
+                stats.data_wait_seconds += dt
             in_batch += 1
+            batch_end = False
             if in_batch == self.batch_size:
                 in_batch = 0
+                batch_end = True
                 if compute_per_batch_s:
                     self.clock.sleep(compute_per_batch_s)
                     stats.compute_seconds += compute_per_batch_s
-            yield idx, result, dt, consumed
+            yield idx, result, dt, consumed, batch_end
 
     def _finish_epoch(self, stats: EpochStats, evictions_before: int) -> None:
         if self.dataset.cache:
@@ -163,7 +209,7 @@ class DeliLoader:
         batch_hits = 0
         batch_misses = 0
         consumed = 0
-        for idx, result, dt, consumed in self._sample_steps(stats):
+        for idx, result, dt, consumed, _batch_end in self._sample_steps(stats):
             batch_wait += dt
             batch_indices.append(idx)
             batch_payloads.append(result.payload)
@@ -182,23 +228,46 @@ class DeliLoader:
         self._finish_epoch(stats, evictions_before)
 
     def step_epoch(
-        self, pipeline_model=None, compute_per_batch_s: float = 0.0
-    ) -> Iterator[None]:
-        """Sample-granular epoch driver for a cluster scheduler.
+        self,
+        pipeline_model=None,
+        compute_per_batch_s: float = 0.0,
+        substep: Optional[SubstepAccess] = None,
+    ) -> Iterator[int]:
+        """Event-granular epoch driver for a cluster scheduler.
 
-        Each ``next()`` processes exactly one sample access — announcing
-        its fetch round, folding due prefetch completions, reading through
-        the tier stack, and advancing the modelled loop costs — so an
-        event-interleaved driver (``RuntimeCluster.run``) can pick, after
-        every sample, whichever node's clock is earliest.  Exhausting the
-        generator finalizes the epoch into ``epoch_history`` exactly like
-        full-batch iteration.
+        Each ``next()`` processes exactly one scheduler event — at step
+        granularity a whole sample access (announcing its fetch round,
+        folding due prefetch completions, reading through the tier stack,
+        advancing the modelled loop costs), at sub-step granularity
+        (``substep``) one virtual-time component of it — and yields a
+        ``repro.core.lockstep`` signal: ``STEP_BATCH_END`` when the event
+        completed a gradient batch (the ``sync="batch"`` parking point),
+        else ``STEP_CONTINUE``.  An event-interleaved driver
+        (``RuntimeCluster.run``) picks, after every event, whichever
+        node's clock is earliest.  Exhausting the generator finalizes the
+        epoch into ``epoch_history`` exactly like full-batch iteration.
         """
         stats = EpochStats(epoch=self._epoch, node=self.node)
         evictions_before = self.dataset.cache.stats.evictions if self.dataset.cache else 0
-        for _ in self._sample_steps(stats, pipeline_model, compute_per_batch_s):
-            yield
+        for item in self._sample_steps(
+            stats, pipeline_model, compute_per_batch_s, substep
+        ):
+            if item is _PHASE:
+                yield STEP_CONTINUE
+            else:
+                yield STEP_BATCH_END if item[4] else STEP_CONTINUE
         self._finish_epoch(stats, evictions_before)
+
+    def sync_to(self, t: float) -> None:
+        """Allreduce barrier (lock-step cluster drive, ``sync="batch"``):
+        account the blocked time into the epoch's stats and jump the node
+        clock to the barrier — the exact float operations
+        ``NodeSimulator.sync_to`` performs, in the same order."""
+        wait = t - self.clock.now()
+        if wait > 0:
+            if self._active_stats is not None:
+                self._active_stats.allreduce_wait_seconds += wait
+            self.clock.advance_to(t)
 
     def __len__(self) -> int:
         n = len(self.sampler)

@@ -39,10 +39,11 @@ docs/PARITY.md).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from typing import TYPE_CHECKING, Callable, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Callable, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.bandwidth import BucketModel, NetworkModel
+from repro.core.bandwidth import BucketModel, NetworkModel, PipelineCostModel
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock
 from repro.core.types import EpochStats, StoreStats
@@ -54,13 +55,25 @@ if TYPE_CHECKING:  # deferred for the same reason as in core.simulator:
 #: Simulator payloads are placeholders; experiments count items, not bytes.
 SENTINEL = b"\x00"
 
+#: Stepper signals: what one scheduler event did to the node's epoch.
+#: ``STEP_DONE`` is falsy on purpose — legacy ``while node.step():`` loops
+#: keep working; ``STEP_BATCH_END`` marks "this event completed a gradient
+#: batch (compute included)", the parking point of the per-batch allreduce
+#: barrier (``sync="batch"``).
+STEP_DONE = 0
+STEP_CONTINUE = 1
+STEP_BATCH_END = 2
+
 
 def drive_interleaved_epoch(
     n_nodes: int,
     now: Callable[[int], float],
     fold_all: Callable[[float], None],
-    step: Callable[[int], bool],
+    step: Callable[[int], int],
     barrier: Callable[[float], None],
+    *,
+    sync: str = "epoch",
+    batch_barrier: Optional[Callable[[float, Tuple[int, ...]], None]] = None,
 ) -> None:
     """THE event-interleaved cluster schedule for one epoch — a single
     implementation shared verbatim by the simulator and the lock-step
@@ -68,23 +81,158 @@ def drive_interleaved_epoch(
     drift between the two projections:
 
       * event heap keyed by ``(now(rank), rank)`` — the globally-earliest
-        sample access always executes next, ties broken by rank;
+        event always executes next, ties broken by rank (one event is a
+        whole sample access at ``granularity="step"``, or one virtual-time
+        component of it at ``granularity="substep"``);
       * before every step, ``fold_all(t)`` applies every node's prefetch
         completions with time <= t (safe: the heap invariant guarantees
-        every other node's own next access is at >= t);
-      * ``step(rank)`` processes one sample access; False = epoch done for
-        that node (it leaves the heap);
+        every other node's own next event is at >= t);
+      * ``step(rank)`` processes one event and returns a signal:
+        ``STEP_DONE`` = epoch exhausted for that node (it leaves the heap),
+        ``STEP_BATCH_END`` = the event completed a gradient batch,
+        ``STEP_CONTINUE`` = anything else;
+      * ``sync="batch"`` (the data-parallel SGD schedule, ISSUE 4): a node
+        reaching ``STEP_BATCH_END`` *parks* until every still-running node
+        reaches its own batch boundary, then
+        ``batch_barrier(max(now(parked)), parked_ranks)`` models the
+        allreduce — the projection accounts each parked node's wait and
+        jumps its clock to the barrier time — and all parked nodes
+        re-enter the heap together.  Within one barrier interval every node
+        advances exactly one batch: BSP at gradient granularity.  A node
+        whose epoch ends (unequal shard) simply stops participating, like
+        a DDP join; its peers' remaining barriers exclude it.
       * finally the BSP epoch barrier: ``barrier(max(now(r)))``
         synchronizes all clocks to the slowest node.
+
+    With ``sync="epoch"`` (default) the schedule is the PR 3 schedule,
+    event for event.
     """
+    if sync not in ("epoch", "batch"):
+        raise ValueError(f"unknown sync {sync!r}; expected 'epoch' or 'batch'")
+    if sync == "batch" and batch_barrier is None:
+        raise ValueError("sync='batch' needs a batch_barrier callback")
     heap = [(now(rank), rank) for rank in range(n_nodes)]
     heapq.heapify(heap)
-    while heap:
+    parked: List[int] = []  # ranks waiting at the current allreduce barrier
+    while heap or parked:
+        if not heap:
+            # Every still-running node reached its batch boundary: allreduce.
+            t_bar = max(now(rank) for rank in parked)
+            fold_all(t_bar)  # rounds finishing during the wait are visible
+            assert batch_barrier is not None
+            batch_barrier(t_bar, tuple(parked))
+            for rank in parked:
+                heapq.heappush(heap, (now(rank), rank))
+            parked = []
+            continue
         t, rank = heapq.heappop(heap)
         fold_all(t)
-        if step(rank):
+        signal = step(rank)
+        if signal == STEP_DONE:
+            continue
+        if sync == "batch" and signal == STEP_BATCH_END:
+            parked.append(rank)
+        else:
             heapq.heappush(heap, (now(rank), rank))
     barrier(max(now(rank) for rank in range(n_nodes)))
+
+
+def peer_probe_payload(
+    registry: Optional["PeerCacheRegistry"], node_id: int, idx: int
+) -> Optional[bytes]:
+    """THE peer-probe sequence (registry lookup -> holder peek ->
+    record_hit), shared by the demand path of both projections and the
+    pre-fetch service, so the directory observes identical traffic
+    everywhere.  Returns the peeked payload (real bytes on the runtime,
+    :data:`SENTINEL` in the simulator) or None on a miss/eviction race."""
+    if registry is None:
+        return None
+    holder = registry.lookup(idx, requester=node_id)
+    if holder is None:
+        return None
+    payload = registry.cache_of(holder).peek(idx)
+    if payload is None:
+        return None  # evicted between lookup and read
+    registry.record_hit()
+    return payload
+
+
+@dataclasses.dataclass
+class SubstepAccess:
+    """One demand read decomposed into sub-step events (ISSUE 4 tentpole).
+
+    At ``granularity="step"`` a sample access is one scheduler event: the
+    probe observes cluster state at the step's *start*, and the whole
+    multi-component latency (peer RTT, bucket GET, CPU) elapses atomically
+    — a prefetch round completing one microsecond into a 15.7 ms GET only
+    becomes visible at the next step.  ``granularity="substep"`` makes each
+    time component its own event.  :meth:`run` is a generator that yields
+    control to ``drive_interleaved_epoch`` at every boundary where other
+    cluster events may interleave:
+
+      1. issue time ``t0``: local cache lookup (own completions folded);
+         a RAM hit finishes the access in this event;
+      2. on a local miss with a peer tier, the probe spends one RTT in
+         flight — **yield** — and is evaluated against the *arrival-time*
+         cluster state, so a round that completed inside that RTT turns the
+         probe into a hit;
+      3. payload transfer (peer streaming or the bucket GET, billed at
+         issue) — **yield** — so peers fold and act *inside* the long GET,
+         and this node's own insert-at-arrival happens at its true virtual
+         time (the step schedule leaked demand inserts to later-code-order
+         but earlier-virtual-time peer probes);
+      4. arrival: miss-insert (when the demand path owns population), CPU
+         overhead, per-sample accounting.
+
+    Both projections construct this object around the same scaled models
+    and run the same generator — identical charge/record/yield order —
+    which is what keeps sub-step specs inside the exact-parity domain.
+    The component *sums* differ from the step schedule only on the peer-hit
+    path (RTT and streaming are charged as two adds instead of one), so
+    sub-step results are a different — more faithful — schedule, compared
+    within, never across, granularities.
+    """
+
+    now: Callable[[], float]
+    charge: Callable[[float], None]  # advance this node's clock
+    fold_own: Callable[[], None]  # apply own prefetch completions <= now
+    local_lookup: Callable[[int], Optional[bytes]]  # CappedCache.get
+    peer_lookup: Optional[Callable[[int], Optional[bytes]]]  # None = no tier
+    bucket_read: Callable[[int], bytes]  # bills the Class B GET at issue
+    insert: Callable[[int, bytes], None]  # demand-path cache insert
+    bucket: BucketModel  # this node's (profile-scaled) models
+    network: NetworkModel
+    pipeline: PipelineCostModel
+    sample_bytes: int
+    insert_on_miss: bool
+
+    def run(self, idx: int, stats: EpochStats) -> Iterator[int]:
+        t0 = self.now()
+        self.fold_own()
+        payload = self.local_lookup(idx)
+        if payload is not None:
+            self.charge(self.pipeline.ram_hit_s)
+            stats.record("ram")
+        else:
+            if self.peer_lookup is not None:
+                self.charge(self.network.lookup_seconds())  # probe in flight
+                yield STEP_CONTINUE
+                self.fold_own()
+                payload = self.peer_lookup(idx)
+            if payload is not None:
+                self.charge(self.network.stream_seconds(self.sample_bytes))
+                stats.record("peer")
+            else:
+                payload = self.bucket_read(idx)
+                self.charge(self.bucket.get_seconds(self.sample_bytes))
+                stats.record("bucket")
+            yield STEP_CONTINUE  # transfer in flight; rounds land inside it
+            self.fold_own()
+            if self.insert_on_miss:
+                self.insert(idx, payload)
+        self.charge(self.pipeline.cpu_overhead_s)
+        stats.samples += 1
+        stats.data_wait_seconds += self.now() - t0
 
 
 class LockstepPrefetchService:
@@ -157,27 +305,36 @@ class LockstepPrefetchService:
     # -- peer probe (identical sequence to the demand path) ------------------
     def _peer_probe(self, idx: int) -> bool:
         """True when a peer's cache can serve ``idx`` right now."""
-        if self.registry is None:
-            return False
-        holder = self.registry.lookup(idx, requester=self.node_id)
-        if holder is None:
-            return False
-        if self.registry.cache_of(holder).peek(idx) is None:
-            return False  # evicted between lookup and read
-        self.registry.record_hit()
-        return True
+        return peer_probe_payload(self.registry, self.node_id, idx) is not None
 
     def _payload(self, key: int) -> bytes:
         return SENTINEL if self.payload_for is None else self.payload_for(key)
 
     # -- event API -----------------------------------------------------------
     def issue(
-        self, keys: Sequence[int], now: float, stats: Optional[EpochStats] = None
+        self,
+        keys: Sequence[int],
+        now: float,
+        stats: Optional[EpochStats] = None,
+        replay: bool = False,
     ) -> float:
         """Start one fetch round at virtual time ``now``; returns its
         completion time.  Class A/B billing happens here (request issue),
-        insertion happens at the completion event (``advance_to``)."""
+        insertion happens at the completion event (``advance_to``).
+
+        ``replay=True`` marks a round *re-announced* during a mid-epoch
+        checkpoint resume (``DeliLoader``): its keys were fetched — and
+        billed — before the crash, so still-cached keys are filtered out
+        and a fully-resident round is a no-op (no listing, no Class B, no
+        worker time).  Keys the capped cache evicted since the checkpoint
+        are genuinely gone and are re-fetched (and re-billed) as a normal
+        round.  Never set for live rounds: live billing is parity-exact
+        with the simulator, which fetches every announced key."""
         keys = list(keys)
+        if replay:
+            keys = [k for k in keys if not self.cache.contains(k)]
+            if not keys:
+                return now
         start = max(now, self.free_at)
         listing_s = 0.0
         if self.list_every_fetch or self.rounds == 0:
@@ -254,7 +411,10 @@ class LockstepPrefetchService:
 
     # -- runtime-facing conveniences (PrefetchService-shaped) ----------------
     def request(
-        self, keys: Sequence[int], stats: Optional[EpochStats] = None
+        self,
+        keys: Sequence[int],
+        stats: Optional[EpochStats] = None,
+        replay: bool = False,
     ) -> float:
         """Loader entry point: issue a round at the node clock's now."""
         if self.clock is None:
@@ -262,7 +422,7 @@ class LockstepPrefetchService:
                 "request() needs the service constructed with a clock; "
                 "clockless callers (the simulator) use issue(keys, now=...)"
             )
-        return self.issue(keys, now=self.clock.now(), stats=stats)
+        return self.issue(keys, now=self.clock.now(), stats=stats, replay=replay)
 
     def drain(self, timeout: float = 0.0) -> bool:
         """No-op: lock-step completions are *events*, folded strictly by

@@ -113,16 +113,27 @@ class PrefetchService:
         self.close()
 
     # -- API used by the Sampler wrapper ------------------------------------
-    def request(self, keys: Sequence[int], stats=None) -> FetchRequest:
+    def request(self, keys: Sequence[int], stats=None, replay: bool = False) -> FetchRequest:
         """Announce a fetch round; returns immediately (paper semantics).
 
         ``stats`` (an ``EpochStats``) is accepted for interface symmetry
         with the deterministic ``repro.core.lockstep`` service and ignored:
         a free-running worker cannot attribute its peer pulls to an epoch
         (they are reported on ``peer_fetches`` / ``PeerStore.peer_hits``).
+
+        ``replay=True`` marks a round re-announced by a mid-epoch resume
+        (``DeliLoader``): a fully cache-resident replay is dropped here so
+        it cannot re-bill the per-round Class A listing (the worker already
+        filters resident keys from the GETs); partially evicted replays are
+        fetched like any round.
         """
         if not self._started:
             self.start()
+        if replay and all(self.cache.contains(k) for k in keys):
+            self._request_counter += 1
+            return FetchRequest(
+                keys=(), request_id=self._request_counter, issued_at=self.clock.now()
+            )
         self._request_counter += 1
         req = FetchRequest(
             keys=tuple(keys), request_id=self._request_counter, issued_at=self.clock.now()

@@ -44,23 +44,30 @@ Measured outputs per epoch = the paper's metrics: miss rate, data-wait.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.bandwidth import (
     DEFAULT_BUCKET,
     DEFAULT_DISK,
     DEFAULT_NETWORK,
     DEFAULT_PIPELINE,
+    DEFAULT_PROFILE,
     BucketModel,
     DiskModel,
     NetworkModel,
+    NodeProfile,
     PipelineCostModel,
 )
 from repro.core.cache import CappedCache
 from repro.core.lockstep import (
     SENTINEL,
+    STEP_BATCH_END,
+    STEP_CONTINUE,
+    STEP_DONE,
     LockstepPrefetchService,
+    SubstepAccess,
     drive_interleaved_epoch,
+    peer_probe_payload,
 )
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
@@ -92,21 +99,40 @@ class SimConfig:
     # Hoard-style replication-aware eviction: a member cache declines to
     # evict the last cluster-resident copy of a sample (needs peer_cache).
     replication_aware_eviction: bool = False
+    # Cluster synchronization schedule (ISSUE 4): "epoch" = BSP barriers at
+    # epoch boundaries only (the PR 3 schedule); "batch" = an allreduce
+    # barrier after every gradient batch (data-parallel SGD), with per-node
+    # waits accounted in EpochStats.allreduce_wait_seconds.
+    sync: str = "epoch"
+    # Event granularity: "step" = one event per sample access (probes
+    # observe state at the step's start); "substep" = every virtual-time
+    # component is its own event (peer probes evaluate at arrival time and
+    # prefetch rounds complete *inside* long accesses).
+    granularity: str = "step"
+
+    def __post_init__(self) -> None:
+        if self.sync not in ("epoch", "batch"):
+            raise ValueError(f"unknown sync {self.sync!r}")
+        if self.granularity not in ("step", "substep"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
 
     def label(self) -> str:
+        sched = "+bsync" if self.sync == "batch" else ""
+        if self.granularity == "substep":
+            sched += "+substep"
         if self.source == "disk":
-            return "disk"
+            return "disk" + sched
         if self.cache_items is None:
-            return "gcp-direct"
+            return "gcp-direct" + sched
         cache = "unlimited" if self.cache_items == -1 else str(self.cache_items)
         peer = "+peer" if self.peer_cache else ""
         if self.peer_cache and self.replication_aware_eviction:
             peer += "+repl"
         if self.prefetch is None:
-            return f"cache[{cache}]{peer}"
+            return f"cache[{cache}]{peer}{sched}"
         return (
             f"cache[{cache}]{peer}+pf(f={self.prefetch.fetch_size},"
-            f"T={self.prefetch.prefetch_threshold})"
+            f"T={self.prefetch.prefetch_threshold}){sched}"
         )
 
 
@@ -135,13 +161,21 @@ class NodeSimulator:
         pipeline: PipelineCostModel = DEFAULT_PIPELINE,
         network: NetworkModel = DEFAULT_NETWORK,
         node_id: int = 0,
+        profile: NodeProfile = DEFAULT_PROFILE,
     ):
         self.spec = spec
         self.cfg = cfg
-        self.bucket = bucket
-        self.disk = disk
-        self.pipeline = pipeline
-        self.network = network
+        # Straggler-aware: this node's calibrated models are rebuilt through
+        # its profile (the default 1.0 multipliers are bitwise no-ops, so
+        # homogeneous clusters keep their exact historical timelines).  The
+        # lock-step runtime scales the same base models through the same
+        # profile methods, which keeps straggler specs parity-exact.
+        self.profile = profile
+        self.bucket = profile.scale_bucket(bucket)
+        self.disk = profile.scale_disk(disk)
+        self.pipeline = profile.scale_pipeline(pipeline)
+        self.network = profile.scale_network(network)
+        self.compute_per_batch_s = profile.batch_compute_s(spec.compute_per_batch_s)
         self.node_id = node_id
         self.t = 0.0
         # Mirror of RuntimeCluster's ``insert_on_miss``: the demand path
@@ -159,8 +193,8 @@ class NodeSimulator:
                 self.cache,
                 sample_bytes=spec.sample_bytes,
                 n_samples=spec.n_samples,
-                bucket=bucket,
-                network=network,
+                bucket=self.bucket,
+                network=self.network,
                 store_stats=self.store_stats,
                 n_connections=cfg.n_connections,
                 list_every_fetch=cfg.list_every_fetch,
@@ -172,8 +206,54 @@ class NodeSimulator:
         # Epoch-in-progress state (stepper API).
         self._stats: Optional[EpochStats] = None
         self._planner_iter = None
+        self._events: Optional[Iterator[int]] = None
         self._samples_in_batch = 0
         self._evictions_before = 0
+
+    # -- sub-step port (the shared SubstepAccess closures) -------------------
+    def _charge(self, seconds: float) -> None:
+        self.t += seconds
+
+    def _fold_own(self) -> None:
+        if self.service is not None:
+            self.service.advance_to(self.t)
+
+    def _bucket_read(self, idx: int) -> bytes:
+        """Bill one demand Class B GET (payloads are sentinels here)."""
+        self.store_stats.class_b_requests += 1
+        self.store_stats.bytes_read += self.spec.sample_bytes
+        return _SENTINEL
+
+    def _build_substep(self) -> Optional[SubstepAccess]:
+        """The sub-step decomposition of this node's demand read, built at
+        epoch start (the peer registry is known by then).  Cache-less and
+        disk-source modes keep the step schedule: they mutate no state a
+        peer could observe, so there is nothing to decompose."""
+        if (
+            self.cfg.granularity != "substep"
+            or self.cfg.source == "disk"
+            or self.cache is None
+        ):
+            return None
+        peer_lookup = None
+        if self.registry is not None:
+            peer_lookup = lambda idx: peer_probe_payload(  # noqa: E731
+                self.registry, self.node_id, idx
+            )
+        return SubstepAccess(
+            now=lambda: self.t,
+            charge=self._charge,
+            fold_own=self._fold_own,
+            local_lookup=self.cache.get,
+            peer_lookup=peer_lookup,
+            bucket_read=self._bucket_read,
+            insert=self.cache.put,
+            bucket=self.bucket,
+            network=self.network,
+            pipeline=self.pipeline,
+            sample_bytes=self.spec.sample_bytes,
+            insert_on_miss=self._insert_on_miss,
+        )
 
     def join_peer_registry(self, registry: "PeerCacheRegistry") -> None:
         """Register this node's cache in the cluster-wide directory."""
@@ -272,25 +352,53 @@ class NodeSimulator:
             pf = PrefetchConfig.disabled()
         self._planner_iter = iter(PrefetchPlanner(order, pf))
         self._samples_in_batch = 0
+        self._events = self._epoch_events(self._build_substep())
 
-    def step(self) -> bool:
-        """Process one sample access (issuing its fetch round first, and
-        per-batch compute after); False when the epoch is exhausted."""
-        assert self._stats is not None and self._planner_iter is not None
-        try:
-            idx, round_ = next(self._planner_iter)
-        except StopIteration:
-            return False
-        if round_ is not None:
-            assert self.service is not None
-            self.service.issue(list(round_), now=self.t, stats=self._stats)
-        self._access(idx, self._stats)
-        self._samples_in_batch += 1
-        if self._samples_in_batch == self.spec.batch_size:
-            self.t += self.spec.compute_per_batch_s
-            self._stats.compute_seconds += self.spec.compute_per_batch_s
-            self._samples_in_batch = 0
-        return True
+    def _epoch_events(self, substep: Optional[SubstepAccess]) -> Iterator[int]:
+        """The epoch as a stream of scheduler events.  At step granularity
+        one event is a whole sample access (the PR 3 unit, same float ops
+        in the same order); at sub-step granularity the shared
+        ``SubstepAccess`` machine yields once per time component.  The
+        event that completes a gradient batch (modelled compute included)
+        is flagged ``STEP_BATCH_END`` — the ``sync="batch"`` parking
+        point."""
+        stats = self._stats
+        assert stats is not None and self._planner_iter is not None
+        for idx, round_ in self._planner_iter:
+            if round_ is not None:
+                assert self.service is not None
+                self.service.issue(list(round_), now=self.t, stats=stats)
+            if substep is not None:
+                yield from substep.run(idx, stats)
+            else:
+                self._access(idx, stats)
+            self._samples_in_batch += 1
+            if self._samples_in_batch == self.spec.batch_size:
+                self.t += self.compute_per_batch_s
+                stats.compute_seconds += self.compute_per_batch_s
+                self._samples_in_batch = 0
+                yield STEP_BATCH_END
+            else:
+                yield STEP_CONTINUE
+
+    def step(self) -> int:
+        """Process one scheduler event; returns a ``repro.core.lockstep``
+        signal: ``STEP_CONTINUE``, ``STEP_BATCH_END`` (this event finished
+        a gradient batch), or the falsy ``STEP_DONE`` when the epoch is
+        exhausted (so legacy ``while node.step():`` loops still work)."""
+        assert self._events is not None
+        return next(self._events, STEP_DONE)
+
+    def sync_to(self, t: float) -> None:
+        """Allreduce barrier: account the blocked time and jump to the
+        barrier's virtual time (never backwards).  Called by the cluster
+        scheduler for every parked node under ``sync="batch"``, and for
+        the epoch barrier of that schedule."""
+        wait = t - self.t
+        if wait > 0:
+            if self._stats is not None:
+                self._stats.allreduce_wait_seconds += wait
+            self.t = t
 
     def finish_epoch(self) -> EpochStats:
         assert self._stats is not None
@@ -299,6 +407,7 @@ class NodeSimulator:
             stats.evictions = self.cache.stats.evictions - self._evictions_before
         self._stats = None
         self._planner_iter = None
+        self._events = None
         return stats
 
     def run_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> EpochStats:
@@ -341,6 +450,7 @@ def simulate_cluster(
     network: NetworkModel = DEFAULT_NETWORK,
     interleaved: bool = True,
     samplers: Optional[Sequence[Sampler]] = None,
+    profiles: Optional[Sequence[NodeProfile]] = None,
 ) -> Tuple[List[EpochStats], StoreStats]:
     """Run all nodes of the paper's setup for N epochs; returns per-node
     per-epoch stats (rank order within each epoch) + aggregate store
@@ -369,9 +479,36 @@ def simulate_cluster(
     ``samplers`` overrides per-rank sample orders (``DataPlaneSpec`` passes
     registry-built samplers so both execution paths share them verbatim);
     default builds from ``cfg.locality_aware``.
+
+    ``cfg.sync="batch"`` adds an allreduce barrier after every gradient
+    batch (ISSUE 4): a node finishing batch k parks until every
+    still-running node finishes its own batch k, the blocked time is
+    accounted in ``EpochStats.allreduce_wait_seconds``, and all clocks jump
+    to the barrier.  ``profiles`` assigns per-node ``NodeProfile``
+    multipliers (straggler scenarios); default = homogeneous.  Both require
+    the interleaved schedule — a sequential node loop cannot express a
+    same-step barrier.
     """
+    if cfg.sync == "batch" and not interleaved:
+        raise ValueError("sync='batch' requires the interleaved schedule")
+    if cfg.granularity == "substep" and not interleaved:
+        raise ValueError("granularity='substep' requires the interleaved schedule")
+    if profiles is None:
+        profiles = [DEFAULT_PROFILE] * spec.n_nodes
+    profiles = list(profiles)
+    if len(profiles) != spec.n_nodes:
+        raise ValueError(f"need {spec.n_nodes} profiles, got {len(profiles)}")
     nodes = [
-        NodeSimulator(spec, cfg, bucket, disk, pipeline, network, node_id=rank)
+        NodeSimulator(
+            spec,
+            cfg,
+            bucket,
+            disk,
+            pipeline,
+            network,
+            node_id=rank,
+            profile=profiles[rank],
+        )
         for rank in range(spec.n_nodes)
     ]
     registry: Optional["PeerCacheRegistry"] = None
@@ -414,7 +551,14 @@ def simulate_cluster(
 
             def _barrier(t: float) -> None:
                 for n in nodes:
-                    n.t = t
+                    if cfg.sync == "batch":
+                        n.sync_to(t)  # epoch-end allreduce: wait accounted
+                    else:
+                        n.t = t  # PR 3 epoch barrier (no accounting)
+
+            def _batch_barrier(t: float, ranks: Tuple[int, ...]) -> None:
+                for r in ranks:
+                    nodes[r].sync_to(t)
 
             drive_interleaved_epoch(
                 len(nodes),
@@ -422,6 +566,8 @@ def simulate_cluster(
                 fold_all=_fold_all,
                 step=lambda rank: nodes[rank].step(),
                 barrier=_barrier,
+                sync=cfg.sync,
+                batch_barrier=_batch_barrier if cfg.sync == "batch" else None,
             )
         else:
             for node in nodes:

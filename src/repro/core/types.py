@@ -101,6 +101,10 @@ class EpochStats:
     samples: int = 0
     data_wait_seconds: float = 0.0  # time the training loop blocked on data
     compute_seconds: float = 0.0
+    # Time blocked at gradient-synchronization (allreduce) barriers.  Only
+    # the per-batch BSP schedule (``sync="batch"``) accounts it; the legacy
+    # epoch-barrier schedule leaves it 0.0 (ISSUE 4).
+    allreduce_wait_seconds: float = 0.0
     evictions: int = 0
     tier_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -139,6 +143,17 @@ class EpochStats:
     @property
     def bucket_reads(self) -> int:
         return self.tier_hits.get("bucket", 0)
+
+    @property
+    def wall_clock_seconds(self) -> float:
+        """The node's busy+blocked time inside the epoch: data-wait +
+        compute + allreduce waits.  Under ``sync="batch"`` this is the
+        node's barrier-to-barrier epoch duration (fig11's metric)."""
+        return (
+            self.data_wait_seconds
+            + self.compute_seconds
+            + self.allreduce_wait_seconds
+        )
 
     @property
     def miss_rate(self) -> float:

@@ -1,5 +1,8 @@
 from repro.data.synthetic import (
     decode_tokens,
+    lm_payload_factory,
+    lm_workload,
     make_lm_payloads,
     make_lm_pipeline,
+    make_lm_spec,
 )

@@ -2,25 +2,39 @@
 
 One "sample" (bucket object) = one packed int32 token sequence of
 ``seq_len + 1`` tokens (inputs + shifted labels), which mirrors how
-pre-training shards store sequences as objects.  ``make_lm_pipeline``
-wires store -> cache -> pre-fetch service -> DeliLoader exactly like the
-paper's Fig. 1 and is what the examples and the trainer use.
+pre-training shards store sequences as objects.
+
+Since ISSUE 4 the LM pipeline is a **named DataPlaneSpec condition**
+(``repro.pipeline.condition("lm", workload, seq_len=..., vocab=...)``)
+rather than a bespoke constructor: ``make_lm_spec`` builds the declarative
+description (workload shape + ``payload_factory`` + fast-forwarded bucket
+model + 50/50 policy) and both the trainer (``repro.launch.train``) and the
+training-loop tests assemble their node pipelines through
+``spec.build_runtime(...)`` like every other condition.  The historical
+``make_lm_pipeline`` survives as a thin shim over that path.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.bandwidth import BucketModel
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock, RealClock
 from repro.core.dataset import CachingDataset
 from repro.core.loader import DeliLoader
 from repro.core.policy import PrefetchConfig
 from repro.core.prefetcher import PrefetchService
-from repro.core.sampler import DistributedPartitionSampler
-from repro.core.store import SampleStore, SimulatedBucketStore
-from repro.core.bandwidth import BucketModel
+from repro.core.store import SampleStore
+from repro.core.workloads import WorkloadSpec
+
+#: The historical make_lm_pipeline bucket: Table-I ratios at 1/1000 wall
+#: time, so threaded LM runs finish in test time.
+FAST_FORWARD_BUCKET = BucketModel(
+    request_latency_s=0.020e-3, per_connection_bw=20e9, listing_latency_s=0.050e-3
+)
 
 
 def make_lm_payloads(
@@ -38,6 +52,68 @@ def decode_tokens(payload: bytes) -> np.ndarray:
     return np.frombuffer(payload, dtype=np.int32)
 
 
+def lm_workload(
+    n_samples: int, seq_len: int, batch_size: int, world: int = 1
+) -> WorkloadSpec:
+    """The LM shard as a pipeline workload: one sample = one packed
+    ``seq_len + 1``-token int32 sequence (inputs + shifted labels).
+    Compute is 0 here — the trainer's real step time drives the clock on
+    the free-running path."""
+    return WorkloadSpec(
+        name="lm-synthetic",
+        n_samples=n_samples,
+        sample_bytes=(seq_len + 1) * 4,
+        batch_size=batch_size,
+        compute_per_epoch_s=0.0,
+        n_nodes=world,
+    )
+
+
+def lm_payload_factory(seq_len: int, vocab: int):
+    """A ``DataPlaneSpec.payload_factory`` producing the synthetic token
+    payloads (seeded by the spec, sized by its workload)."""
+
+    def factory(spec) -> Dict[int, bytes]:
+        return make_lm_payloads(
+            spec.workload.n_samples, seq_len, vocab, seed=spec.seed
+        )
+
+    return factory
+
+
+def make_lm_spec(
+    *,
+    n_samples: int,
+    seq_len: int,
+    vocab: int,
+    batch_size: int,
+    cache_items: int = 2048,
+    world: int = 1,
+    policy: Optional[PrefetchConfig] = None,
+    bucket_model: Optional[BucketModel] = None,
+    seed: int = 0,
+):
+    """The LM pipeline as a declarative ``DataPlaneSpec`` (ROADMAP item:
+    fold ``make_lm_pipeline`` into the spec layer).
+
+    Defaults match the historical constructor: fast-forwarded bucket
+    timing, the paper's 50/50 policy for the given cache size, partition
+    sampler.  Build a node pipeline with ``spec.build_runtime(clock=
+    RealClock())`` (free-running, the trainer's mode) or drive the
+    lock-step/simulator projections like any other condition.
+    """
+    from repro.pipeline.spec import DataPlaneSpec  # lazy: pipeline imports core
+
+    return DataPlaneSpec(
+        workload=lm_workload(n_samples, seq_len, batch_size, world),
+        cache_items=cache_items,
+        prefetch=policy if policy is not None else PrefetchConfig.fifty_fifty(cache_items),
+        bucket=bucket_model or FAST_FORWARD_BUCKET,
+        payload_factory=lm_payload_factory(seq_len, vocab),
+        seed=seed,
+    )
+
+
 def make_lm_pipeline(
     *,
     n_samples: int,
@@ -53,28 +129,46 @@ def make_lm_pipeline(
     clock: Optional[Clock] = None,
     seed: int = 0,
 ) -> Tuple[DeliLoader, PrefetchService, CachingDataset]:
-    """The paper's node pipeline over a simulated bucket.
+    """Legacy shim over :func:`make_lm_spec` + ``build_runtime``.
 
-    Returns (loader, service, dataset); callers ``service.start()`` / use the
-    loader as a context-free iterator, and must ``service.close()`` at exit.
-    The default policy is the paper's 50/50 for the given cache size.
+    Returns rank's ``(loader, service, dataset)`` from the spec-built
+    cluster; callers ``service.start()`` / use the loader as a
+    context-free iterator, and must ``service.close()`` at exit — exactly
+    the historical contract.  Passing ``store`` keeps the fully manual
+    assembly (a spec cannot adopt a foreign store object).
     """
-    payloads = make_lm_payloads(n_samples, seq_len, vocab, seed)
     clock = clock or RealClock()
-    if store is None:
-        # fast-forwarded bucket: Table-I ratios at 1/1000 wall time
-        model = bucket_model or BucketModel(
-            request_latency_s=0.020e-3, per_connection_bw=20e9,
-            listing_latency_s=0.050e-3,
-        )
-        store = SimulatedBucketStore(payloads, model=model, clock=clock)
     policy = policy or PrefetchConfig.fifty_fifty(cache_items)
-    cache = CappedCache(max_items=cache_items)
-    dataset = CachingDataset(store, cache, insert_on_miss=policy.enabled is False)
-    service = PrefetchService(store=store, cache=cache, n_connections=16, clock=clock)
-    sampler = DistributedPartitionSampler(n_samples, rank=rank, world=world, seed=seed)
-    loader = DeliLoader(
-        dataset, sampler, batch_size=batch_size, config=policy,
-        service=service, clock=clock, node=rank,
+    if store is not None:
+        # Manual-store path: the pre-spec wiring, preserved verbatim.
+        cache = CappedCache(max_items=cache_items)
+        dataset = CachingDataset(store, cache, insert_on_miss=policy.enabled is False)
+        service = PrefetchService(store=store, cache=cache, n_connections=16, clock=clock)
+        from repro.core.sampler import DistributedPartitionSampler
+
+        sampler = DistributedPartitionSampler(n_samples, rank=rank, world=world, seed=seed)
+        loader = DeliLoader(
+            dataset, sampler, batch_size=batch_size, config=policy,
+            service=service, clock=clock, node=rank,
+        )
+        return loader, service, dataset
+    spec = make_lm_spec(
+        n_samples=n_samples,
+        seq_len=seq_len,
+        vocab=vocab,
+        batch_size=batch_size,
+        cache_items=cache_items,
+        world=world,
+        policy=policy,
+        bucket_model=bucket_model,
+        seed=seed,
     )
-    return loader, service, dataset
+    cluster = spec.build_runtime(clock=clock)
+    loader = cluster.loaders[rank]
+    service = cluster.services[rank]
+    if service is None:  # disabled policy: idle service for `with service:`
+        service = PrefetchService(
+            store=loader.dataset.store, cache=cluster.caches[rank], clock=clock
+        )
+        loader.service = service
+    return loader, service, loader.dataset

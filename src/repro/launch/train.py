@@ -15,8 +15,8 @@ import argparse
 import tempfile
 
 from repro import configs
-from repro.core import PrefetchConfig
-from repro.data import decode_tokens, make_lm_pipeline
+from repro.core import PrefetchConfig, RealClock
+from repro.data import decode_tokens, make_lm_spec
 from repro.training.loop import Trainer, TrainerConfig
 from repro.training.optimizer import OptSettings
 
@@ -50,16 +50,21 @@ def main():
                          "embeds; see tests/test_arch_smoke.py for the path")
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M")
 
-    loader, service, _ = make_lm_pipeline(
+    # The LM pipeline is a declarative condition now (ISSUE 4 satellite):
+    # one DataPlaneSpec, projected into this host's free-running threaded
+    # node pipeline.  On a pod, every host runs this same spec and picks
+    # its own rank's loader/service.
+    spec = make_lm_spec(
         n_samples=max(1024, args.batch * 64),
         seq_len=args.seq_len,
         vocab=cfg.vocab,
         batch_size=args.batch,
         cache_items=args.cache,
-        rank=args.rank,
         world=args.world,
         policy=PrefetchConfig.fifty_fifty(args.cache),
     )
+    cluster = spec.build_runtime(clock=RealClock())
+    loader, service = cluster.loaders[args.rank], cluster.services[args.rank]
     trainer = Trainer(
         cfg,
         loader,

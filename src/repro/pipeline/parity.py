@@ -11,8 +11,16 @@ agree **exactly**:
   * per-tier hit counts (ram / disk / peer / bucket / disk-source),
     aggregated over the run;
   * total Class A (listing) and Class B (GET) requests billed;
-  * per-(epoch, node) sample counts **and data-wait seconds** (bit-equal
-    floats, not approximately-equal ones).
+  * per-(epoch, node) sample counts, **data-wait seconds** and — since the
+    per-batch allreduce schedule (ISSUE 4) — **allreduce-wait seconds**
+    (bit-equal floats, not approximately-equal ones).
+
+Since ISSUE 4 the parity domain additionally covers ``sync="batch"``
+(per-batch allreduce barriers), ``granularity="substep"`` (per-component
+scheduler events) and heterogeneous ``nodes`` profiles (stragglers): the
+barrier arithmetic lives once in ``repro.core.lockstep`` and straggler
+scaling rebuilds the calibrated models through the same ``NodeProfile``
+methods on both sides.
 
 ``assert_parity`` checks exactly that, driving ``build_runtime()`` in its
 default lock-step mode.  Since the lock-step scheduler landed, specs with
@@ -53,9 +61,9 @@ class ParityReport:
     runtime_class_a: int
     sim_class_b: int
     runtime_class_b: int
-    # (epoch, node, samples, data_wait_seconds) per node-epoch.
-    sim_samples: List[Tuple[int, int, int, float]]
-    runtime_samples: List[Tuple[int, int, int, float]]
+    # (epoch, node, samples, data_wait_s, allreduce_wait_s) per node-epoch.
+    sim_samples: List[Tuple[int, int, int, float, float]]
+    runtime_samples: List[Tuple[int, int, int, float, float]]
 
     @property
     def exact(self) -> bool:
@@ -100,10 +108,12 @@ def run_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
         sim_class_b=sim_store.class_b_requests,
         runtime_class_b=run_store.class_b_requests,
         sim_samples=[
-            (s.epoch, s.node, s.samples, s.data_wait_seconds) for s in sim_stats
+            (s.epoch, s.node, s.samples, s.data_wait_seconds, s.allreduce_wait_seconds)
+            for s in sim_stats
         ],
         runtime_samples=[
-            (s.epoch, s.node, s.samples, s.data_wait_seconds) for s in run_stats
+            (s.epoch, s.node, s.samples, s.data_wait_seconds, s.allreduce_wait_seconds)
+            for s in run_stats
         ],
     )
 

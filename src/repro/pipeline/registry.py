@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List
 
+from repro.core.bandwidth import straggler_profiles
 from repro.core.policy import PrefetchConfig
 from repro.core.sampler import (
     DistributedPartitionSampler,
@@ -184,4 +185,70 @@ def _locality(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneS
     """Cache-aware partitioning (beyond-paper, Yang & Cong '19 direction)."""
     return DataPlaneSpec(
         workload=workload, cache_items=cache_items, sampler="locality", **kw
+    )
+
+
+@register_condition("lm")
+def _lm(
+    workload: WorkloadSpec,
+    seq_len: int = 128,
+    vocab: int = 512,
+    cache_items: int = 2048,
+    **kw,
+) -> DataPlaneSpec:
+    """Synthetic LM pre-training shards over the DELI pipeline (ROADMAP:
+    ``make_lm_pipeline`` folded into the spec layer).  One sample = one
+    packed ``seq_len + 1``-token int32 sequence.  Delegates to
+    ``repro.data.make_lm_spec`` — ONE home for the LM defaults
+    (fast-forwarded bucket, 50/50 policy, token payload factory) — taking
+    the dataset/cluster/batch shape from ``workload``."""
+    import dataclasses as _dc
+
+    from repro.data.synthetic import make_lm_spec
+
+    spec = make_lm_spec(
+        n_samples=workload.n_samples,
+        seq_len=seq_len,
+        vocab=vocab,
+        batch_size=workload.batch_size,
+        cache_items=cache_items,
+        world=workload.n_nodes,
+        policy=kw.pop("prefetch", None),
+        bucket_model=kw.pop("bucket", None),
+        seed=kw.pop("seed", 0),
+    )
+    return _dc.replace(spec, **kw) if kw else spec
+
+
+@register_condition("batch-sync")
+def _batch_sync(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """Per-batch allreduce barriers (data-parallel SGD schedule, ISSUE 4):
+    nodes synchronize gradients after every batch instead of only at epoch
+    boundaries; blocked time lands in ``EpochStats.allreduce_wait_seconds``."""
+    return DataPlaneSpec(
+        workload=workload, cache_items=cache_items, sync="batch", **kw
+    )
+
+
+@register_condition("straggler")
+def _straggler(
+    workload: WorkloadSpec,
+    cache_items: int = -1,
+    compute: float = 2.0,
+    bandwidth: float = 2.0,
+    slow_ranks: tuple = (0,),
+    **kw,
+) -> DataPlaneSpec:
+    """The canonical straggler scenario (``benchmarks/fig11_stragglers.py``):
+    a cooperative peer-cache cluster under the per-batch allreduce schedule
+    with ``slow_ranks`` slowed by the given compute/bandwidth factors."""
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        peer_cache=True,
+        sync="batch",
+        nodes=straggler_profiles(
+            workload.n_nodes, slow_ranks=slow_ranks, compute=compute, bandwidth=bandwidth
+        ),
+        **kw,
     )

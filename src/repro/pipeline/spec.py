@@ -40,16 +40,24 @@ from repro.core.bandwidth import (
     DEFAULT_DISK,
     DEFAULT_NETWORK,
     DEFAULT_PIPELINE,
+    DEFAULT_PROFILE,
     BucketModel,
     DiskModel,
     NetworkModel,
+    NodeProfile,
     PipelineCostModel,
 )
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock, VirtualClock
 from repro.core.dataset import CachingDataset
 from repro.core.loader import DeliLoader
-from repro.core.lockstep import LockstepPrefetchService, drive_interleaved_epoch
+from repro.core.lockstep import (
+    STEP_DONE,
+    LockstepPrefetchService,
+    SubstepAccess,
+    drive_interleaved_epoch,
+    peer_probe_payload,
+)
 from repro.core.policy import PrefetchConfig
 from repro.core.prefetcher import PrefetchService
 from repro.core.simulator import SimConfig, simulate_cluster
@@ -88,6 +96,20 @@ class DataPlaneSpec:
         projections event-interleaved — peer lookups observe *mid-epoch*
         cache state; ``False`` keeps the legacy sequential node schedule
         (epoch-boundary snapshots) for A/B comparisons.
+    sync: cluster synchronization schedule (ISSUE 4).  ``"epoch"``
+        (default) barriers only at epoch boundaries; ``"batch"`` adds an
+        allreduce barrier after every gradient batch — the data-parallel
+        SGD schedule — with per-node blocked time accounted in
+        ``EpochStats.allreduce_wait_seconds``.  Requires ``interleaved``.
+    granularity: scheduler event unit.  ``"step"`` (default) = one event
+        per sample access, probes observing cluster state at the step's
+        start; ``"substep"`` = every virtual-time component is its own
+        event, so peer probes evaluate at *arrival* time and prefetch
+        rounds complete inside long bucket GETs.  Requires ``interleaved``.
+    nodes: optional per-rank ``NodeProfile`` tuple (straggler scenarios):
+        multiplicative compute/bandwidth slowdowns folded into each node's
+        calibrated models on BOTH projections, so heterogeneous clusters
+        stay inside the exact-parity domain.
 
     Construction helpers: ``from_sim_config`` lifts a legacy ``SimConfig``;
     ``repro.pipeline.condition(name, workload)`` builds registered
@@ -105,6 +127,9 @@ class DataPlaneSpec:
     peer_cache: bool = False
     replication_aware_eviction: bool = False
     interleaved: bool = True
+    sync: str = "epoch"  # "epoch" | "batch" (per-batch allreduce barriers)
+    granularity: str = "step"  # "step" | "substep" (event decomposition)
+    nodes: Optional[Tuple[NodeProfile, ...]] = None  # per-rank straggler profiles
     seed: int = 0
     # Calibrated models (Table I defaults; override for fast-forwarded runs).
     bucket: BucketModel = DEFAULT_BUCKET
@@ -124,11 +149,34 @@ class DataPlaneSpec:
             raise ValueError("replication_aware_eviction requires peer_cache")
         if self.cache_items is not None and self.cache_items != -1 and self.cache_items <= 0:
             raise ValueError("cache_items must be positive, -1 (unlimited) or None")
+        if self.sync not in ("epoch", "batch"):
+            raise ValueError(f"unknown sync {self.sync!r}")
+        if self.granularity not in ("step", "substep"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.sync == "batch" and not self.interleaved:
+            raise ValueError("sync='batch' requires the interleaved schedule")
+        if self.granularity == "substep" and not self.interleaved:
+            raise ValueError("granularity='substep' requires the interleaved schedule")
+        if self.nodes is not None:
+            if not isinstance(self.nodes, tuple):
+                object.__setattr__(self, "nodes", tuple(self.nodes))
+            if len(self.nodes) != self.workload.n_nodes:
+                raise ValueError(
+                    f"nodes has {len(self.nodes)} profiles for "
+                    f"{self.workload.n_nodes} ranks"
+                )
+
+    def profile(self, rank: int) -> NodeProfile:
+        """Rank ``rank``'s heterogeneity profile (default: homogeneous)."""
+        return self.nodes[rank] if self.nodes is not None else DEFAULT_PROFILE
 
     # -- naming ---------------------------------------------------------------
     def label(self) -> str:
         """Human-readable condition label (same scheme as ``SimConfig``)."""
-        return self.to_sim_config().label()
+        base = self.to_sim_config().label()
+        if self.nodes is not None and any(p != DEFAULT_PROFILE for p in self.nodes):
+            base += "+straggler"
+        return base
 
     # -- projections ----------------------------------------------------------
     def to_sim_config(self) -> SimConfig:
@@ -143,6 +191,8 @@ class DataPlaneSpec:
             locality_aware=self.sampler == "locality",
             peer_cache=self.peer_cache,
             replication_aware_eviction=self.replication_aware_eviction,
+            sync=self.sync,
+            granularity=self.granularity,
         )
 
     @classmethod
@@ -161,6 +211,8 @@ class DataPlaneSpec:
             sampler="locality" if cfg.locality_aware else "partition",
             peer_cache=cfg.peer_cache,
             replication_aware_eviction=cfg.replication_aware_eviction,
+            sync=cfg.sync,
+            granularity=cfg.granularity,
             seed=seed,
             **overrides,
         )
@@ -229,6 +281,7 @@ class SimCluster:
             network=self.spec.network,
             interleaved=self.spec.interleaved,
             samplers=self.spec.build_samplers(),
+            profiles=[self.spec.profile(r) for r in range(self.spec.workload.n_nodes)],
         )
 
 
@@ -263,6 +316,17 @@ class RuntimeCluster:
     def __init__(self, spec: DataPlaneSpec, clock: Optional[Clock] = None):
         self.spec = spec
         self.lockstep = clock is None
+        if not self.lockstep and (spec.sync != "epoch" or spec.granularity != "step"):
+            # Restrict the domain loudly (docs/PARITY.md policy): a
+            # free-running threaded cluster has no deterministic event
+            # order to park at a batch barrier or to split into sub-steps —
+            # silently ignoring the knobs would report allreduce_wait == 0
+            # for a schedule the caller explicitly asked for.
+            raise ValueError(
+                "sync='batch' / granularity='substep' need the lock-step "
+                "runtime (build_runtime() with no clock); the free-running "
+                "threaded mode cannot implement them"
+            )
         w = spec.workload
         # Per-node clocks: fresh VirtualClocks in lock-step mode, the one
         # shared clock in free-running mode.
@@ -289,6 +353,12 @@ class RuntimeCluster:
         self.samplers: List = spec.build_samplers()
         self.services: List = []
         self.loaders: List[DeliLoader] = []
+        # Per-node straggler-scaled models and modelled loop costs: the same
+        # NodeProfile methods the simulator applies, over the same base
+        # models, so heterogeneous timelines stay bit-identical.
+        self.pipelines: List[PipelineCostModel] = []
+        self.computes: List[float] = []
+        self.substeps: List[Optional[SubstepAccess]] = []
         if spec.source == "disk":
             # Materialize the dataset once; every node reads the same files
             # (the paper's disk baseline: data staged on each VM's disk).
@@ -296,10 +366,17 @@ class RuntimeCluster:
             FileSystemStore.write_dataset(self._disk_root, payloads)
         for rank in range(w.n_nodes):
             node_clock = self.clocks[rank]
+            prof = spec.profile(rank)
+            node_bucket_model = prof.scale_bucket(spec.bucket)
+            node_network = prof.scale_network(spec.network)
+            node_pipeline = prof.scale_pipeline(spec.pipeline_model)
+            self.pipelines.append(node_pipeline)
+            self.computes.append(prof.batch_compute_s(w.compute_per_batch_s))
+            bucket: Optional[SimulatedBucketStore] = None
             if spec.source == "disk":
                 disk_store = FileSystemStore(
                     self._disk_root,
-                    model=spec.disk,
+                    model=prof.scale_disk(spec.disk),
                     clock=node_clock,
                     simulate_timing=True,
                 )
@@ -313,7 +390,7 @@ class RuntimeCluster:
                 service = None
             else:
                 bucket = SimulatedBucketStore(
-                    payloads, model=spec.bucket, clock=node_clock
+                    payloads, model=node_bucket_model, clock=node_clock
                 )
                 self.buckets.append(bucket)
                 cache = None
@@ -328,7 +405,7 @@ class RuntimeCluster:
                         bucket,
                         self.registry,
                         node=rank,
-                        network=spec.network,
+                        network=node_network,
                         clock=node_clock,
                     )
                 dataset = CachingDataset(store, cache, insert_on_miss=not prefetch_on)
@@ -341,8 +418,8 @@ class RuntimeCluster:
                             cache,
                             sample_bytes=w.sample_bytes,
                             n_samples=w.n_samples,
-                            bucket=spec.bucket,
-                            network=spec.network,
+                            bucket=node_bucket_model,
+                            network=node_network,
                             store_stats=bucket.stats,
                             n_connections=spec.n_connections,
                             list_every_fetch=spec.list_every_fetch,
@@ -373,6 +450,80 @@ class RuntimeCluster:
             self.caches.append(cache)
             self.services.append(service)
             self.loaders.append(loader)
+            self.substeps.append(
+                self._build_substep(
+                    rank,
+                    cache,
+                    service,
+                    bucket,
+                    node_clock,
+                    node_bucket_model,
+                    node_network,
+                    node_pipeline,
+                    insert_on_miss=not prefetch_on,
+                )
+                if self.lockstep
+                else None
+            )
+
+    def _build_substep(
+        self,
+        rank: int,
+        cache: Optional[CappedCache],
+        service,
+        bucket: Optional[SimulatedBucketStore],
+        clock: Clock,
+        bucket_model: BucketModel,
+        network: NetworkModel,
+        pipeline: PipelineCostModel,
+        insert_on_miss: bool,
+    ) -> Optional[SubstepAccess]:
+        """This node's sub-step demand-read machine (``granularity=
+        "substep"``), mirroring ``NodeSimulator._build_substep`` closure
+        for closure — with real payload bytes and billing routed to the
+        node's bucket store.  Cache-less and disk-source modes keep the
+        step schedule (nothing a peer could observe mid-access)."""
+        if (
+            self.spec.granularity != "substep"
+            or self.spec.source == "disk"
+            or cache is None
+        ):
+            return None
+        assert bucket is not None
+
+        def bucket_read(idx: int) -> bytes:
+            # The demand-path Class B GET, billed at issue; the GET's
+            # duration is charged by the shared machine so the payload
+            # lands — and the insert event fires — at its true virtual
+            # time instead of atomically with the probe.
+            payload = self._payloads[idx]
+            bucket._account(b=1, nbytes=len(payload))
+            return payload
+
+        fold_own = (
+            (lambda: service.advance_to(clock.now()))
+            if service is not None
+            else (lambda: None)
+        )
+        peer_lookup = None
+        if self.registry is not None:
+            peer_lookup = lambda idx: peer_probe_payload(  # noqa: E731
+                self.registry, rank, idx
+            )
+        return SubstepAccess(
+            now=clock.now,
+            charge=clock.sleep,
+            fold_own=fold_own,
+            local_lookup=cache.get,
+            peer_lookup=peer_lookup,
+            bucket_read=bucket_read,
+            insert=cache.put,
+            bucket=bucket_model,
+            network=network,
+            pipeline=pipeline,
+            sample_bytes=self.spec.workload.sample_bytes,
+            insert_on_miss=insert_on_miss,
+        )
 
     # -- lifecycle ------------------------------------------------------------
     def close(self) -> None:
@@ -401,28 +552,29 @@ class RuntimeCluster:
             s.update_cache_views(views)
 
     def _run_lockstep(self, epochs: int) -> List[EpochStats]:
-        """Sample-granular deterministic drive, mirroring the simulator's
+        """Event-granular deterministic drive, mirroring the simulator's
         cluster schedule exactly: the same event heap (interleaved) or the
         same rank-sequential order, the same fold-before-step completion
-        barriers, the same BSP epoch barrier."""
+        barriers, the same per-batch allreduce barriers (``sync="batch"``),
+        the same BSP epoch barrier."""
         w = self.spec.workload
         all_stats: List[EpochStats] = []
         for e in range(epochs):
             self._update_locality_views()
             steppers = []
-            for loader in self.loaders:
+            for rank, loader in enumerate(self.loaders):
                 loader.set_epoch(e)
                 steppers.append(
                     loader.step_epoch(
-                        pipeline_model=self.spec.pipeline_model,
-                        compute_per_batch_s=w.compute_per_batch_s,
+                        pipeline_model=self.pipelines[rank],
+                        compute_per_batch_s=self.computes[rank],
+                        substep=self.substeps[rank],
                     )
                 )
             if self.spec.interleaved:
                 # The one shared schedule implementation
                 # (repro.core.lockstep.drive_interleaved_epoch) — the same
                 # heap/fold/barrier code the simulator runs.
-                done = object()
 
                 def _fold_all(t: float) -> None:
                     for svc in self.services:  # completion events <= t are
@@ -430,15 +582,28 @@ class RuntimeCluster:
                             svc.advance_to(t)
 
                 def _barrier(t: float) -> None:
-                    for c in self.clocks:
-                        c.advance_to(t)
+                    for rank, c in enumerate(self.clocks):
+                        if self.spec.sync == "batch":
+                            # Epoch-end allreduce: wait accounted, exactly
+                            # like NodeSimulator.sync_to.
+                            self.loaders[rank].sync_to(t)
+                        else:
+                            c.advance_to(t)
+
+                def _batch_barrier(t: float, ranks: Tuple[int, ...]) -> None:
+                    for r in ranks:
+                        self.loaders[r].sync_to(t)
 
                 drive_interleaved_epoch(
                     w.n_nodes,
                     now=lambda rank: self.clocks[rank].now(),
                     fold_all=_fold_all,
-                    step=lambda rank: next(steppers[rank], done) is not done,
+                    step=lambda rank: next(steppers[rank], STEP_DONE),
                     barrier=_barrier,
+                    sync=self.spec.sync,
+                    batch_barrier=(
+                        _batch_barrier if self.spec.sync == "batch" else None
+                    ),
                 )
             else:
                 for stepper in steppers:
@@ -451,16 +616,15 @@ class RuntimeCluster:
 
     def _run_threaded(self, epochs: int, compute: bool) -> List[EpochStats]:
         """Free-running drive (epoch-outer, rank-inner, real services)."""
-        w = self.spec.workload
         all_stats: List[EpochStats] = []
         for e in range(epochs):
             self._update_locality_views()
-            for loader in self.loaders:
+            for rank, loader in enumerate(self.loaders):
                 loader.set_epoch(e)
                 for _ in loader:
                     if compute:
                         assert self.clock is not None
-                        self.clock.sleep(w.compute_per_batch_s)
+                        self.clock.sleep(self.computes[rank])
                 assert loader.last_epoch_stats is not None
                 all_stats.append(loader.last_epoch_stats)
             for svc in self.services:

@@ -44,6 +44,79 @@ def test_table1_parallel_bucket_speed():
     assert 250e3 < v < 310e3  # ~281.73 kB/s
 
 
+def test_table1_endpoint_and_connection_clamp_every_path():
+    """ISSUE 4 satellite: (a) the Table I endpoint is exact — 16 threads
+    give 281.73/49.80 = 5.66x sequential by calibration; (b) callers
+    passing ``n_connections > max_connections`` are clamped in EVERY path:
+    the model itself, the simulated bucket's bulk GET, and the lock-step
+    pre-fetch service's round sizing, so an oversized thread-pool request
+    can never fabricate super-Table-I bandwidth."""
+    from repro.core import (
+        DEFAULT_NETWORK,
+        LockstepPrefetchService,
+        SimConfig,
+        StoreStats,
+        VirtualClock,
+        simulate_cluster,
+    )
+
+    # (a) Exact endpoint: eff(16) == 5.66x (the calibration identity).
+    assert math.isclose(
+        DEFAULT_BUCKET.parallel_efficiency(16), 281.73 / 49.80, rel_tol=1e-12
+    )
+    assert DEFAULT_BUCKET.parallel_efficiency(1) == 1.0
+
+    # (b1) Model-level clamp, both ends.
+    sizes = [784] * 64
+    at_max = DEFAULT_BUCKET.bulk_get_seconds(sizes, DEFAULT_BUCKET.max_connections)
+    for n in (17, 64, 10_000):
+        assert DEFAULT_BUCKET.bulk_get_seconds(sizes, n) == at_max
+    assert DEFAULT_BUCKET.bulk_get_seconds(sizes, 0) == DEFAULT_BUCKET.bulk_get_seconds(
+        sizes, 1
+    )
+
+    # (b2) Store bulk_get path: oversized pools advance the clock exactly
+    # like n = 16.
+    payloads = make_synthetic_payloads(64, 784)
+    durations = {}
+    for n in (16, 4096):
+        clock = VirtualClock()
+        store = SimulatedBucketStore(payloads, clock=clock)
+        store.bulk_get(list(range(64)), n_connections=n)
+        durations[n] = clock.now()
+    assert durations[16] == durations[4096]
+
+    # (b3) Lock-step service round sizing: a round issued with an oversized
+    # connection count completes at the same virtual time as n = 16.
+    def round_done(n):
+        from repro.core import CappedCache
+
+        svc = LockstepPrefetchService(
+            CappedCache(),
+            sample_bytes=784,
+            n_samples=64,
+            bucket=DEFAULT_BUCKET,
+            network=DEFAULT_NETWORK,
+            store_stats=StoreStats(),
+            n_connections=n,
+        )
+        return svc.issue(list(range(32)), now=0.0)
+
+    assert round_done(16) == round_done(512)
+
+    # (b4) End-to-end: a whole simulated condition with n_connections = 64
+    # reproduces the n = 16 run bit-for-bit (per-node data-wait floats).
+    spec = MNIST.scaled(0.02)
+    runs = {}
+    for n in (16, 64):
+        cfg = SimConfig(
+            cache_items=256, prefetch=PrefetchConfig.fifty_fifty(256), n_connections=n
+        )
+        stats, store = simulate_cluster(spec, cfg, epochs=2, seed=0)
+        runs[n] = ([s.data_wait_seconds for s in stats], store.class_b_requests)
+    assert runs[16] == runs[64]
+
+
 # ---------------------------------------------------------------------------
 # Paper claim: unlimited cache, random re-partition => ~66% epoch-2 miss.
 # ---------------------------------------------------------------------------

@@ -269,8 +269,8 @@ class _SynchronousService(PrefetchService):
     announcing call returns (removes the thread-scheduling race so Class B
     accounting is exact on a virtual clock)."""
 
-    def request(self, keys, stats=None):
-        req = super().request(keys, stats=stats)
+    def request(self, keys, stats=None, replay=False):
+        req = super().request(keys, stats=stats, replay=replay)
         assert self.drain(timeout=30)
         return req
 
@@ -316,3 +316,93 @@ def test_mid_epoch_resume_with_prefetch_exact_class_b(payloads_1k):
     # cached: each object was fetched from the bucket exactly once.
     assert store.stats.class_b_requests == len(payloads_1k)
     assert svc.samples_fetched == len(payloads_1k)
+
+
+def test_mid_epoch_resume_batch_schedule_alignment_and_no_rebilling(payloads_1k):
+    """ISSUE 4 satellite: the sample-granular ``_resume_cursor`` under the
+    per-batch allreduce schedule.  A resume landing *inside* a gradient
+    batch must (a) complete that partial batch at its TRUE epoch boundary
+    — the batch counter resumes at ``cursor % batch_size``, so the partial
+    batch reaches exactly one allreduce point instead of re-spanning a
+    full batch from the resume offset — and (b) not re-issue the replayed
+    rounds' Class B GETs or per-round listings (the lock-step service
+    filters cache-resident keys from ``replay`` rounds).  Pinned against a
+    crash-free control run: the crashed+resumed run bills identical Class
+    A/B totals and hits the identical batch boundaries."""
+    from repro.core import (
+        DEFAULT_NETWORK,
+        STEP_BATCH_END,
+        LockstepPrefetchService,
+        VirtualClock,
+    )
+
+    BATCH, CURSOR = 16, 70  # 70 % 16 == 6: the checkpoint is mid-batch
+    cfg = PrefetchConfig.fifty_fifty(64)
+
+    def build():
+        clock = VirtualClock()
+        store = SimulatedBucketStore(payloads_1k, clock=clock)
+        cache = CappedCache()  # unlimited: interrupted fetches stay resident
+        svc = LockstepPrefetchService(
+            cache,
+            sample_bytes=1024,
+            n_samples=len(payloads_1k),
+            bucket=store.model,
+            network=DEFAULT_NETWORK,
+            store_stats=store.stats,
+            payload_for=payloads_1k.__getitem__,
+            clock=clock,
+        )
+        ds = CachingDataset(store, cache, insert_on_miss=False)
+
+        def loader():
+            sampler = DistributedPartitionSampler(len(payloads_1k), 0, 1, seed=0)
+            return DeliLoader(ds, sampler, BATCH, cfg, service=svc, clock=clock)
+
+        return store, svc, loader
+
+    def drive(loader, limit=None):
+        """step_epoch drive collecting (samples_consumed, batch_end) marks."""
+        signals = []
+        gen = loader.step_epoch()
+        for sig in gen:
+            signals.append(sig)
+            if limit is not None and len(signals) >= limit:
+                gen.close()
+                break
+        return signals
+
+    # Control: one uninterrupted epoch.
+    store_a, svc_a, make_a = build()
+    ctl = make_a()
+    ctl.set_epoch(0)
+    ctl_signals = drive(ctl)
+    ctl_boundaries = [i for i, s in enumerate(ctl_signals) if s == STEP_BATCH_END]
+
+    # Crash at sample CURSOR (mid-batch), then resume in a fresh loader.
+    store_b, svc_b, make_b = build()
+    first = make_b()
+    first.set_epoch(0)
+    drive(first, limit=CURSOR)
+    svc_b.advance_to(float("1e12"))  # restart gap: in-flight rounds land
+    second = make_b()
+    second.load_state_dict({"epoch": 0, "cursor": CURSOR})
+    res_signals = drive(second)
+
+    # (a) Partial-batch alignment: the first allreduce point of the resumed
+    # run is the true boundary (sample 80 => 10 post-resume events), and
+    # every later boundary matches the control's grid shifted by CURSOR.
+    boundaries = [i for i, s in enumerate(res_signals) if s == STEP_BATCH_END]
+    assert boundaries[0] == (BATCH - CURSOR % BATCH) - 1
+    assert [b + CURSOR for b in boundaries] == [
+        b for b in ctl_boundaries if b >= CURSOR
+    ]
+    assert len(boundaries) == len(payloads_1k) // BATCH - CURSOR // BATCH
+    # No double-counted samples and exactly the remainder accounted.
+    s = second.last_epoch_stats
+    assert s.samples == len(payloads_1k) - CURSOR
+
+    # (b) No re-billed traffic: identical Class A/B to the crash-free run.
+    assert store_b.stats.class_b_requests == store_a.stats.class_b_requests
+    assert store_b.stats.class_a_requests == store_a.stats.class_a_requests
+    assert svc_b.samples_fetched == svc_a.samples_fetched == len(payloads_1k)

@@ -177,7 +177,7 @@ def test_sim_runtime_parity_exact(name, kw):
     spec = condition(name, MNIST.scaled(0.02), **kw)  # 1200 samples, 3 nodes
     report = assert_parity(spec, epochs=2)
     assert report.sim_samples == report.runtime_samples
-    assert sum(n for _, _, n, _ in report.sim_samples) == 2 * 1200
+    assert sum(n for _, _, n, _, _ in report.sim_samples) == 2 * 1200
 
 
 @pytest.mark.parametrize(
@@ -226,6 +226,61 @@ def test_parity_with_disabled_prefetch_config_is_exact():
     )
     report = assert_parity(spec, epochs=2)
     assert report.sim_tiers.get("ram", 0) > 0  # miss-inserts produced hits
+
+
+def test_parity_peer_miss_lookup_charged_exactly_once():
+    """ISSUE 4 satellite (audit): a demand read that probes a peer and
+    misses charges ``NetworkModel.lookup_seconds()`` exactly once before
+    the bucket fallback, on BOTH projections — including steps where the
+    lock-step prefetch service probes the same key at round issue (the
+    service's probe charges the *round's* duration, never the training
+    loop's clock).  Pinned two ways:
+
+    1. exact (``==``) data-wait parity on a capped-cache spec where peer
+       misses dominate — any double charge on either side diverges the
+       float timelines immediately;
+    2. analytically: with the partition sampler and capped caches, peers
+       never hold this node's samples, so every bucket read's wait is
+       lookup + GET + cpu — the accounted total matches the one-lookup
+       closed form and is far from the two-lookup one.
+    """
+    import math
+
+    from repro.core import DEFAULT_BUCKET, DEFAULT_NETWORK, DEFAULT_PIPELINE, MNIST
+
+    w = MNIST.scaled(0.02)
+    # Pin 1: demand path only, cache far below the 400-sample partition —
+    # nearly every access is a failed peer probe + bucket GET.
+    demand = condition("cache+peer", w, cache_items=60)
+    report = assert_parity(demand, epochs=2)
+    assert report.sim_tiers.get("bucket", 0) > report.sim_tiers.get("ram", 0)
+    # Pin 2: prefetch on — the service probes round keys at issue while the
+    # demand path probes the same keys in the same steps; data-wait parity
+    # stays exact, so neither projection slipped in a second loop charge.
+    assert_parity(
+        condition(
+            "cache+peer", w, cache_items=60, prefetch=PrefetchConfig.fifty_fifty(60)
+        ),
+        epochs=2,
+    )
+
+    # Analytic closed form, epoch 0 (partitions are disjoint and nothing is
+    # cached cluster-wide at the start, so every probe misses: peer == 0):
+    # every access pays cpu; ram hits add ram_hit_s; every bucket read adds
+    # ONE lookup + the sequential GET.
+    lookup = DEFAULT_NETWORK.lookup_seconds()
+    get_s = DEFAULT_BUCKET.get_seconds(w.sample_bytes)
+    sim_stats, _ = demand.build_sim().run(epochs=1)
+    for row in sim_stats:
+        assert row.peer_hits == 0
+        expect_1 = (
+            row.samples * DEFAULT_PIPELINE.cpu_overhead_s
+            + row.ram_hits * DEFAULT_PIPELINE.ram_hit_s
+            + row.bucket_reads * (lookup + get_s)
+        )
+        expect_2 = expect_1 + row.bucket_reads * lookup  # a double charge
+        assert math.isclose(row.data_wait_seconds, expect_1, rel_tol=1e-9)
+        assert not math.isclose(row.data_wait_seconds, expect_2, rel_tol=1e-3)
 
 
 def test_parity_peer_tier_counts_nonzero():

@@ -8,8 +8,8 @@ import pytest
 
 pytestmark = pytest.mark.slow  # XLA-compile-heavy; excluded from the smoke lane
 
-from repro.core import PrefetchConfig
-from repro.data import decode_tokens, make_lm_pipeline
+from repro.core import PrefetchConfig, RealClock
+from repro.data import decode_tokens, make_lm_spec
 from repro.models.config import ArchConfig
 from repro.training import checkpoint as ckpt
 from repro.training.loop import Trainer, TrainerConfig, elastic_repartition
@@ -23,10 +23,14 @@ CFG = ArchConfig(
 
 
 def _trainer(ckpt_dir=None, every=5, n_samples=512):
-    loader, service, _ = make_lm_pipeline(
+    # ISSUE 4 satellite: the trainer's pipeline comes from the declarative
+    # LM spec (make_lm_pipeline folded into DataPlaneSpec).
+    spec = make_lm_spec(
         n_samples=n_samples, seq_len=SEQ, vocab=CFG.vocab, batch_size=BATCH,
         cache_items=CACHE, policy=PrefetchConfig.fifty_fifty(CACHE),
     )
+    cluster = spec.build_runtime(clock=RealClock())
+    loader, service = cluster.loaders[0], cluster.services[0]
     t = Trainer(
         CFG, loader,
         TrainerConfig(seq_len=SEQ, batch_size=BATCH, checkpoint_dir=ckpt_dir,
