@@ -1,0 +1,178 @@
+"""Fig. 12 (beyond-paper): the optimality gap — how far the paper's
+heuristic knobs sit from the clairvoyant data plane (ISSUE 5).
+
+The paper tunes two knobs (fetch size, prefetch threshold) and lands on
+the 50/50 rule; figs. 3-11 measure *heuristic* policies but never say how
+far they are from optimal.  Because DL samplers are seeded PRNG
+permutations, the exact future access order is known ahead of time (NoPFS:
+"Clairvoyant Prefetching", Dryden et al.) — so the optimum is
+*implementable*: Belady (farthest-future-use) eviction and the
+OraclePrefetchPlanner (deadline-ordered, capacity-windowed,
+residency-filtered rounds; per-round re-listing subsumed by clairvoyance).
+This benchmark runs, at equal cache capacity across three cache-pressure
+points and under both cluster schedules (the default epoch barrier and the
+straggler/batch-sync schedule of fig. 11):
+
+  * demand        — capped cache only, FIFO (paper §IV-B);
+  * belady-only   — same, with Belady eviction: what clairvoyant
+    *eviction* alone buys;
+  * 50/50         — the paper's best heuristic (f = T = cache/2);
+  * full-fetch    — the fig. 9 baseline (cache == fetch, T = 0);
+  * oracle        — clairvoyant prefetch + Belady eviction;
+  * oracle+peer   — plus the cooperative peer tier (cluster-resident keys
+    pulled from peers at round issue, never billed to Class B).
+
+Reported per condition: total data-wait, Class A/B requests, tier hits,
+and the oracle-vs-50/50 gap (how much of the heuristic's data-wait the
+oracle removes — the price of tuning knobs instead of knowing the future).
+
+Claim checks:
+
+  * oracle data-wait <= every heuristic condition (demand, 50/50,
+    full-fetch) at equal capacity, on both schedules;
+  * Belady Class B <= FIFO Class B at equal capacity (clairvoyant eviction
+    never re-fetches more);
+  * oracle Class B <= 50/50 Class B (the residency filter + Belady keep
+    fetched bytes useful);
+  * the oracle-vs-50/50 gap is reported (finite) for every condition row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import check, fmt_table, run_spec
+from repro.core import MNIST, straggler_profiles
+from repro.pipeline import condition
+
+#: Cache capacity as a fraction of the per-node partition (pressure sweep).
+PRESSURES = (0.25, 0.5, 1.0)
+HEURISTICS = ("demand", "50/50", "full-fetch")
+
+
+def _conditions(w, cache_items):
+    return [
+        ("demand", condition("cache", w, cache_items=cache_items)),
+        ("belady-only", condition("belady-only", w, cache_items=cache_items)),
+        ("50/50", condition("fifty-fifty", w, cache_items=cache_items)),
+        ("full-fetch", condition("full-fetch", w, fetch_size=cache_items)),
+        ("oracle", condition("oracle", w, cache_items=cache_items)),
+        ("oracle+peer", condition("oracle+peer", w, cache_items=cache_items)),
+    ]
+
+
+def _schedules(w):
+    """The default epoch-barrier schedule and fig. 11's straggler/batch-sync
+    schedule (rank 0 slowed 2x, per-batch allreduce barriers)."""
+    return [
+        ("epoch", {}),
+        (
+            "bsync+straggler",
+            dict(sync="batch", nodes=straggler_profiles(w.n_nodes, (0,), 2.0, 2.0)),
+        ),
+    ]
+
+
+def _measure(spec):
+    r = run_spec(spec, epochs=2)
+    return {
+        "wait": sum(s.data_wait_seconds for s in r["stats"]),
+        "class_a": r["store"].class_a_requests,
+        "class_b": r["store"].class_b_requests,
+        "ram": r["tiers"].get("ram", 0),
+        "peer": r["tiers"].get("peer", 0),
+    }
+
+
+def run(fast: bool = False) -> dict:
+    w = MNIST.scaled(0.05 if fast else 0.1)
+    rows, checks, gaps = [], [], []
+    for sched_tag, sched_kw in _schedules(w):
+        for frac in PRESSURES:
+            cache_items = max(2, int(w.partition_size * frac))
+            results = {}
+            for tag, base in _conditions(w, cache_items):
+                spec = dataclasses.replace(base, **sched_kw) if sched_kw else base
+                results[tag] = _measure(spec)
+            fifty = results["50/50"]["wait"]
+            for tag, m in results.items():
+                gap = (fifty - m["wait"]) / fifty if fifty else float("nan")
+                gaps.append((sched_tag, frac, tag, gap))
+                rows.append(
+                    [
+                        sched_tag,
+                        f"{frac:.0%}",
+                        tag,
+                        f"{m['wait']:.2f}s",
+                        f"{m['class_b']}",
+                        f"{m['class_a']}",
+                        f"{m['ram']}/{m['peer']}",
+                        f"{gap:+.1%}",
+                    ]
+                )
+            oracle = results["oracle"]
+            for heur in HEURISTICS:
+                checks.append(
+                    check(
+                        f"fig12/{sched_tag}/C={cache_items}/oracle-wait<=-{heur}",
+                        oracle["wait"] <= results[heur]["wait"] * (1 + 1e-9),
+                        f"oracle {oracle['wait']:.2f}s <= {heur} "
+                        f"{results[heur]['wait']:.2f}s",
+                    )
+                )
+            checks.append(
+                check(
+                    f"fig12/{sched_tag}/C={cache_items}/belady-classB<=fifo",
+                    results["belady-only"]["class_b"] <= results["demand"]["class_b"],
+                    f"belady B={results['belady-only']['class_b']} <= "
+                    f"fifo B={results['demand']['class_b']}",
+                )
+            )
+            checks.append(
+                check(
+                    f"fig12/{sched_tag}/C={cache_items}/oracle-classB<=50/50",
+                    oracle["class_b"] <= results["50/50"]["class_b"],
+                    f"oracle B={oracle['class_b']} <= "
+                    f"50/50 B={results['50/50']['class_b']}",
+                )
+            )
+    checks.append(
+        check(
+            "fig12/gap-reported-per-condition",
+            all(g == g for _, _, _, g in gaps),  # finite, no NaNs
+            f"{len(gaps)} condition rows carry an oracle-vs-50/50 gap "
+            "(see the 'vs 50/50' column)",
+        )
+    )
+    return {
+        "name": "Fig. 12 — optimality gap: heuristic knobs vs the clairvoyant "
+        "data plane (beyond-paper)",
+        "table": fmt_table(
+            [
+                "schedule",
+                "cache/partition",
+                "condition",
+                "data-wait",
+                "class B",
+                "class A",
+                "ram/peer hits",
+                "vs 50/50",
+            ],
+            rows,
+        ),
+        "rows": rows,
+        "checks": checks,
+        "notes": (
+            "3-node MNIST-scale cluster, 2 epochs, equal cache capacity per "
+            "row block. 'vs 50/50' = fraction of the 50/50 heuristic's "
+            "data-wait each condition removes (negative = worse). The "
+            "oracle conditions derive fetch rounds from the seeded "
+            "sampler's exact future order (NoPFS-style clairvoyance): "
+            "deadline-ordered ramped rounds kill the 50/50 cold-start "
+            "stall, the residency filter stops re-fetching cached keys, "
+            "Belady eviction keeps the soonest-needed bytes, and (peer "
+            "condition) cluster-resident keys stream from peers without "
+            "Class B billing. Per-round re-listing is subsumed by "
+            "clairvoyance (one initial listing billed). The gap persists "
+            "under the fig. 11 straggler/batch-sync schedule."
+        ),
+    }

@@ -24,6 +24,7 @@ MODULES = [
     "fig9_best_settings",
     "fig10_peer_cache",
     "fig11_stragglers",
+    "fig12_oracle_gap",
     "table2_cost",
     "beyond_paper",
     "roofline_report",

@@ -2,7 +2,8 @@
 
 Public API:
     stores:      SimulatedBucketStore, FileSystemStore, InMemoryStore, ReliableStore
-    cache:       CappedCache
+    cache:       CappedCache (+ pluggable EvictionPolicy; FifoEviction default,
+                 repro.oracle.BeladyEviction = clairvoyant farthest-future-use)
     policy:      PrefetchConfig (incl. .fifty_fifty / .full_fetch), PrefetchPlanner
     runtime:     PrefetchService, CachingDataset, DeliLoader, run_epochs
     lock-step:   LockstepPrefetchService (deterministic prefetch events,
@@ -31,7 +32,7 @@ from repro.core.bandwidth import (
     PipelineCostModel,
     straggler_profiles,
 )
-from repro.core.cache import CappedCache
+from repro.core.cache import CappedCache, EvictionPolicy, FifoEviction
 from repro.core.clock import RealClock, VirtualClock
 from repro.core.cost import (
     GcpPrices,

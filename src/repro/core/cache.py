@@ -18,6 +18,14 @@ RAM (§V-D/§VI); with an explicit tier we can *measure* that effect
 
 Capacity may be expressed in items (as the paper's experiments do: cache
 sizes are sample counts) or bytes (production: disks are sized in bytes).
+
+Eviction is a pluggable **policy object** (ISSUE 5): the capped-collection
+FIFO order above is ``FifoEviction``, the default; the oracle subsystem
+(``repro.oracle``) provides ``BeladyEviction`` — farthest-future-use, the
+provably optimal offline policy — built on the clairvoyant access order a
+seeded sampler exposes.  The replication-aware ``eviction_guard`` composes
+with *any* policy: guarded entries are skipped and capacity always wins
+when everything is guarded.
 """
 from __future__ import annotations
 
@@ -27,6 +35,62 @@ import threading
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.types import SampleKey
+
+
+class EvictionPolicy:
+    """Strategy that picks which cached entry to evict.
+
+    ``select_victim`` receives the cache's entries **in FIFO (insertion)
+    order** plus the optional replication-aware guard, and returns
+    ``(victim_key, guard_skips)`` — the entry to evict and how many guarded
+    entries the guard *actually redirected away from* (the ``guard_skips``
+    accounting ``CacheStats`` has always kept).  Policies must be
+    deterministic pure functions of their inputs: both execution
+    projections evaluate them against identical cache states, which is what
+    keeps policy-driven eviction inside the exact-parity domain
+    (docs/PARITY.md).  Called under the cache lock — must not call back
+    into the cache.
+    """
+
+    name = "policy"
+
+    def select_victim(
+        self,
+        entries: Iterable[SampleKey],
+        guard: Optional[Callable[[int], bool]],
+    ) -> Tuple[SampleKey, int]:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+class FifoEviction(EvictionPolicy):
+    """The paper's capped-collection order: evict the oldest insert.
+
+    Byte-for-byte the pre-ISSUE-5 ``CappedCache`` behaviour, as a policy
+    object: oldest *unguarded* entry first (early-stopping scan, so the
+    typical probe count is 1); plain FIFO fallback — with no skips counted
+    — when every entry is guarded, so capacity bounds always hold.
+    """
+
+    name = "fifo"
+
+    def select_victim(
+        self,
+        entries: Iterable[SampleKey],
+        guard: Optional[Callable[[int], bool]],
+    ) -> Tuple[SampleKey, int]:
+        first: Optional[SampleKey] = None
+        skipped = 0
+        for key in entries:
+            if first is None:
+                first = key
+            if guard is None or not guard(key.index):
+                return key, skipped
+            skipped += 1
+        assert first is not None, "select_victim called on an empty cache"
+        return first, 0  # everything guarded: capacity wins, no redirect
 
 
 class CacheStats:
@@ -63,7 +127,8 @@ class CappedCache:
     paper's "unlimited cache" baseline).  ``ram_items`` bounds the in-memory
     tier; entries beyond it are transparently spilled to ``spill_dir`` (if
     given) or kept in RAM anyway (pure-RAM mode, used by the simulator where
-    payloads are sizes, not bytes).
+    payloads are sizes, not bytes).  ``eviction_policy`` selects victims
+    (default: ``FifoEviction``, the capped-collection order).
     """
 
     def __init__(
@@ -73,6 +138,7 @@ class CappedCache:
         ram_items: Optional[int] = None,
         spill_dir: Optional[str] = None,
         session: str = "default",
+        eviction_policy: Optional[EvictionPolicy] = None,
     ):
         if max_items is not None and max_items <= 0:
             raise ValueError("max_items must be positive or None")
@@ -83,6 +149,7 @@ class CappedCache:
         self.ram_items = ram_items
         self.spill_dir = spill_dir
         self.session = session
+        self.eviction_policy = eviction_policy or FifoEviction()
         self.stats = CacheStats()
         # Replication-aware eviction (Hoard-style): a guard saying "this
         # index must not be evicted" (e.g. it is the last cluster-resident
@@ -112,23 +179,14 @@ class CappedCache:
         return os.path.join(self.spill_dir, f"{key.session}-{key.index}.bin")
 
     def _evict_one_locked(self) -> None:
-        victim: Optional[SampleKey] = None
-        if self.eviction_guard is not None:
-            # Oldest *unguarded* entry; fall through to plain FIFO when
-            # everything is guarded (capacity always wins).  The scan
-            # early-stops at the first evictable entry, so the typical
-            # probe count is 1; ``guard_skips`` counts the protections
-            # that actually redirected an eviction.
-            skipped = 0
-            for key in self._entries:
-                if not self.eviction_guard(key.index):
-                    victim = key
-                    break
-                skipped += 1
-            if victim is not None:
-                self.stats.guard_skips += skipped
-        if victim is None:
-            victim = next(iter(self._entries))
+        # The policy picks the victim (FIFO by default, farthest-future-use
+        # under ``repro.oracle.BeladyEviction``); the guard semantics live
+        # in the policy too, so ``guard_skips`` keeps counting protections
+        # that actually redirected an eviction.
+        victim, skipped = self.eviction_policy.select_victim(
+            self._entries, self.eviction_guard
+        )
+        self.stats.guard_skips += skipped
         payload = self._entries.pop(victim)
         self._total_bytes -= self._sizes.pop(victim)
         if payload is None and self.spill_dir:

@@ -60,14 +60,28 @@ class DeliLoader:
         clock: Optional[Clock] = None,
         node: int = 0,
         drop_last: bool = True,
+        planner_factory: Optional[Callable[[Sequence[int]], object]] = None,
+        oracle_view=None,
     ):
+        """``planner_factory`` overrides the knob-driven ``PrefetchPlanner``
+        with a custom epoch-order -> planner construction — the oracle data
+        plane (ISSUE 5) passes ``repro.oracle.planner.make_planner_factory``
+        here, the SAME construction ``NodeSimulator.begin_epoch`` uses.
+        ``oracle_view`` is this node's clairvoyant ``NodeAccessView``; the
+        loader drives it (``begin_epoch`` per epoch, ``on_consume`` per
+        sample) in lines mirrored against the simulator's, which is what
+        keeps Belady eviction and clairvoyant prefetch parity-exact."""
         if config.enabled and service is None:
             raise ValueError("prefetching enabled but no PrefetchService given")
+        if planner_factory is not None and service is None:
+            raise ValueError("planner_factory issues fetch rounds; give a service")
         self.dataset = dataset
         self.sampler = sampler
         self.batch_size = batch_size
         self.config = config
         self.service = service
+        self.planner_factory = planner_factory
+        self.oracle_view = oracle_view
         self.clock = clock or RealClock()
         self.node = node
         self.drop_last = drop_last
@@ -151,12 +165,22 @@ class DeliLoader:
         order = list(self.sampler)
         skip = self._resume_cursor
         self._resume_cursor = 0
-        planner = PrefetchPlanner(order, self.config)
+        if self.oracle_view is not None:
+            self.oracle_view.begin_epoch(self._epoch, order)
+        planner = (
+            self.planner_factory(order)
+            if self.planner_factory is not None
+            else PrefetchPlanner(order, self.config)
+        )
         consumed = 0
         in_batch = skip % self.batch_size
         self._active_stats = stats
         for idx, round_ in planner:
             replaying = consumed < skip
+            if self.oracle_view is not None:
+                # Cursor advances at access *start* (mirror of
+                # NodeSimulator._epoch_events), replayed resumes included.
+                self.oracle_view.on_consume(idx)
             if round_ is not None and self.service is not None:
                 self.service.request(round_, stats=stats, replay=replaying)
             if replaying:

@@ -132,7 +132,10 @@ def validate_config_against_cache(config: PrefetchConfig) -> List[str]:
                 "threshold + fetch_size exceeds cache: an in-flight fetch can evict "
                 "not-yet-consumed samples"
             )
-        if c > 2 * config.fetch_size and config.prefetch_threshold <= c // 2:
+        # `2 * fetch_size + 1` so the 50/50 construction (f = T = c // 2)
+        # never trips this on an odd cache size — c = 2*(c//2) + 1 is the
+        # 50/50 point itself, not excess capacity.
+        if c > 2 * config.fetch_size + 1 and config.prefetch_threshold <= c // 2:
             warnings.append(
                 f"cache_items={c} > 2*fetch_size: extra capacity beyond 2x fetch size "
                 "does not reduce miss rate (paper Fig. 7); consider the 50/50 config"

@@ -109,12 +109,37 @@ class SimConfig:
     # component is its own event (peer probes evaluate at arrival time and
     # prefetch rounds complete *inside* long accesses).
     granularity: str = "step"
+    # Oracle data plane (ISSUE 5): "belady" plugs farthest-future-use
+    # eviction (repro.oracle.BeladyEviction) behind the capped cache;
+    # "oracle" replaces the fetch_size/threshold planner with the
+    # clairvoyant OraclePrefetchPlanner.  Both need a local cache and the
+    # bucket source; both stay exactly parity-checked.
+    eviction: str = "fifo"  # "fifo" | "belady"
+    prefetch_policy: str = "paper"  # "paper" | "oracle"
 
     def __post_init__(self) -> None:
         if self.sync not in ("epoch", "batch"):
             raise ValueError(f"unknown sync {self.sync!r}")
         if self.granularity not in ("step", "substep"):
             raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.eviction not in ("fifo", "belady"):
+            raise ValueError(f"unknown eviction {self.eviction!r}")
+        if self.prefetch_policy not in ("paper", "oracle"):
+            raise ValueError(f"unknown prefetch_policy {self.prefetch_policy!r}")
+        if self.eviction == "belady" and (
+            self.cache_items is None or self.source == "disk"
+        ):
+            raise ValueError("eviction='belady' needs a local cache (bucket source)")
+        if self.prefetch_policy == "oracle":
+            if self.cache_items is None or self.source == "disk":
+                raise ValueError(
+                    "prefetch_policy='oracle' needs a local cache (bucket source)"
+                )
+            if self.prefetch is not None:
+                raise ValueError(
+                    "prefetch_policy='oracle' replaces the fetch_size/threshold "
+                    "knobs; leave prefetch=None"
+                )
 
     def label(self) -> str:
         sched = "+bsync" if self.sync == "batch" else ""
@@ -128,6 +153,10 @@ class SimConfig:
         peer = "+peer" if self.peer_cache else ""
         if self.peer_cache and self.replication_aware_eviction:
             peer += "+repl"
+        if self.eviction == "belady":
+            peer += "+belady"
+        if self.prefetch_policy == "oracle":
+            return f"cache[{cache}]{peer}+pf(oracle){sched}"
         if self.prefetch is None:
             return f"cache[{cache}]{peer}{sched}"
         return (
@@ -178,17 +207,35 @@ class NodeSimulator:
         self.compute_per_batch_s = profile.batch_compute_s(spec.compute_per_batch_s)
         self.node_id = node_id
         self.t = 0.0
+        # Oracle data plane (ISSUE 5): the clairvoyant planner replaces the
+        # knob-driven one, and/or Belady replaces FIFO eviction.  Both hang
+        # off a per-node NodeAccessView, installed by the cluster driver
+        # (``attach_oracle_view``) or auto-created (current-epoch horizon)
+        # for standalone single-node use at ``begin_epoch``.
+        self._oracle_prefetch = cfg.prefetch_policy == "oracle"
+        self._needs_oracle = self._oracle_prefetch or cfg.eviction == "belady"
+        self.oracle_view = None  # repro.oracle.NodeAccessView when needed
+        self._belady = None
         # Mirror of RuntimeCluster's ``insert_on_miss``: the demand path
         # inserts into the cache exactly when no *active* pre-fetch service
         # owns population (paper §IV-B vs §IV-C) — a present-but-disabled
-        # PrefetchConfig counts as inactive on both projections.
-        self._insert_on_miss = not (cfg.prefetch is not None and cfg.prefetch.enabled)
+        # PrefetchConfig counts as inactive on both projections; the
+        # clairvoyant planner counts as active.
+        self._insert_on_miss = not (
+            (cfg.prefetch is not None and cfg.prefetch.enabled)
+            or self._oracle_prefetch
+        )
         self.store_stats = StoreStats()
         self.cache: Optional[CappedCache] = None
         self.service: Optional[LockstepPrefetchService] = None
         if cfg.cache_items is not None:
             max_items = None if cfg.cache_items == -1 else cfg.cache_items
-            self.cache = CappedCache(max_items=max_items)
+            if cfg.eviction == "belady":
+                from repro.oracle.eviction import BeladyEviction  # lazy: no
+                # module-level repro.core -> repro.oracle imports (cycle rule)
+
+                self._belady = BeladyEviction()
+            self.cache = CappedCache(max_items=max_items, eviction_policy=self._belady)
             self.service = LockstepPrefetchService(
                 self.cache,
                 sample_bytes=spec.sample_bytes,
@@ -254,6 +301,15 @@ class NodeSimulator:
             sample_bytes=self.spec.sample_bytes,
             insert_on_miss=self._insert_on_miss,
         )
+
+    def attach_oracle_view(self, view) -> None:
+        """Install this node's clairvoyant view (``repro.oracle``), wired
+        by the cluster driver so the view can replay the driver's own
+        sampler for future-epoch lookahead.  Re-points the Belady policy,
+        which outlives epochs along with the cache."""
+        self.oracle_view = view
+        if self._belady is not None:
+            self._belady.attach_view(view)
 
     def join_peer_registry(self, registry: "PeerCacheRegistry") -> None:
         """Register this node's cache in the cluster-wide directory."""
@@ -347,10 +403,34 @@ class NodeSimulator:
         assert self._stats is None, "finish the current epoch first"
         self._stats = EpochStats(epoch=epoch, node=node)
         self._evictions_before = self.cache.stats.evictions if self.cache else 0
+        if self._needs_oracle:
+            # Standalone single-node runs get a view with no future-epoch
+            # replay; cluster drivers attach a replay-capable one first.
+            from repro.oracle.oracle import NodeAccessView
+
+            if self.oracle_view is None:
+                self.attach_oracle_view(NodeAccessView())
+            self.oracle_view.begin_epoch(epoch, order)
         pf = self.cfg.prefetch if self.cfg.prefetch is not None else PrefetchConfig.disabled()
         if self.cfg.source == "disk" or self.cache is None:
             pf = PrefetchConfig.disabled()
-        self._planner_iter = iter(PrefetchPlanner(order, pf))
+        if self._oracle_prefetch:
+            from repro.oracle.planner import planner_for
+
+            assert self.cache is not None  # SimConfig validation
+            # THE shared planner construction (repro.oracle.planner) — the
+            # lock-step runtime builds its planner through the same call.
+            self._planner_iter = iter(
+                planner_for(
+                    order,
+                    policy="oracle",
+                    config=None,
+                    capacity=self.cfg.cache_items,
+                    resident=self.cache.contains,
+                )
+            )
+        else:
+            self._planner_iter = iter(PrefetchPlanner(order, pf))
         self._samples_in_batch = 0
         self._events = self._epoch_events(self._build_substep())
 
@@ -365,6 +445,11 @@ class NodeSimulator:
         stats = self._stats
         assert stats is not None and self._planner_iter is not None
         for idx, round_ in self._planner_iter:
+            if self.oracle_view is not None:
+                # Cursor advances at access *start* (mirrored line in
+                # DeliLoader._sample_steps): a just-consumed key competes
+                # for cache space on its NEXT occurrence.
+                self.oracle_view.on_consume(idx)
             if round_ is not None:
                 assert self.service is not None
                 self.service.issue(list(round_), now=self.t, stats=stats)
@@ -527,6 +612,16 @@ def simulate_cluster(
     samplers = list(samplers)
     if len(samplers) != spec.n_nodes:
         raise ValueError(f"need {spec.n_nodes} samplers, got {len(samplers)}")
+    if cfg.eviction == "belady" or cfg.prefetch_policy == "oracle":
+        # Clairvoyant views over the driver's own samplers (ISSUE 5); the
+        # lock-step RuntimeCluster builds the identical AccessOracle over
+        # the identically-constructed samplers, so every next_use answer —
+        # and every Belady/oracle decision — matches exactly.
+        from repro.oracle import AccessOracle
+
+        oracle = AccessOracle(samplers)
+        for rank, node in enumerate(nodes):
+            node.attach_oracle_view(oracle.view(rank))
     locality = [s for s in samplers if hasattr(s, "update_cache_views")]
     all_stats: List[EpochStats] = []
     for e in range(epochs):

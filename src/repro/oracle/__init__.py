@@ -1,0 +1,48 @@
+"""repro.oracle — the clairvoyant data-plane policy subsystem (ISSUE 5).
+
+DL samplers are seeded PRNG permutations: the exact future access sequence
+of every node is known before the epoch starts.  NoPFS ("Clairvoyant
+Prefetching", Dryden et al.) turns that into provably better prefetching;
+Belady's MIN turns it into provably optimal eviction.  This package holds
+both, as policy objects the existing data plane plugs in:
+
+  * :class:`AccessOracle` / :class:`NodeAccessView`
+    (``repro.oracle.oracle``) — replay the registry samplers ahead of time
+    and answer ``next_use(key)`` in O(1);
+  * :class:`BeladyEviction` (``repro.oracle.eviction``) — farthest-future-
+    use victim selection behind ``CappedCache``'s ``EvictionPolicy``
+    protocol, composing with the replication-aware guard;
+  * :class:`OraclePrefetchPlanner` / :func:`planner_for`
+    (``repro.oracle.planner``) — deadline-ordered, capacity-windowed,
+    residency-filtered fetch rounds replacing the paper's
+    fetch-size/threshold knobs.
+
+Surfaced declaratively as ``DataPlaneSpec(eviction="belady",
+prefetch_policy="oracle")`` and the registry conditions ``"oracle"``,
+``"oracle+peer"`` and ``"belady-only"``; quantified against the heuristics
+by ``benchmarks/fig12_oracle_gap.py``.  Everything here is pure logic
+instantiated by BOTH projections, so oracle specs stay inside the
+exact-parity domain (docs/PARITY.md).
+
+Import discipline: ``repro.oracle`` imports ``repro.core`` submodules;
+``repro.core`` modules import this package only lazily (function scope),
+never at module level — same rule as ``repro.distributed``.
+"""
+from repro.oracle.eviction import BeladyEviction
+from repro.oracle.oracle import NEVER, AccessOracle, NodeAccessView, replayable
+from repro.oracle.planner import (
+    OraclePrefetchPlanner,
+    make_planner_factory,
+    planner_for,
+)
+
+__all__ = [
+    "NEVER",
+    "AccessOracle",
+    "BeladyEviction",
+    "NodeAccessView",
+    "OraclePrefetchPlanner",
+    "make_planner_factory",
+    "planner_for",
+    "replayable",
+]

@@ -1,0 +1,83 @@
+"""Belady (farthest-future-use) eviction — the optimal offline policy.
+
+Belady's MIN algorithm evicts the cached entry whose next use lies
+farthest in the future; for a fixed access sequence it provably minimizes
+misses.  DL training *has* a fixed access sequence — the seeded sampler's
+permutation (see ``repro.oracle.oracle``) — so MIN is implementable, not
+just a paper bound.  This module plugs it behind ``CappedCache`` through
+the :class:`repro.core.cache.EvictionPolicy` protocol:
+
+  * victim = the unguarded entry with the largest ``next_use`` (keys never
+    used again within the oracle horizon sort past everything); ties break
+    by FIFO insertion order, so Belady degrades *exactly* to FIFO when the
+    oracle sees no future (e.g. a drained horizon) — deterministic on both
+    projections;
+  * the Hoard-style replication-aware ``eviction_guard`` composes: guarded
+    entries are skipped, ``guard_skips`` counts the guarded entries that
+    would otherwise have been evicted (farther next use than the chosen
+    victim), and when *everything* is guarded the unrestricted Belady
+    choice is evicted anyway — capacity always wins, mirroring
+    ``FifoEviction``'s fallback.
+
+The scan is O(cache size) per eviction with O(1) ``next_use`` lookups;
+the capped caches in this repo's experiments hold sample counts, not
+gigabytes, so the scan is the same order of work the guarded FIFO path
+already did.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, Optional, Tuple
+
+from repro.core.cache import EvictionPolicy
+from repro.core.types import SampleKey
+from repro.oracle.oracle import NodeAccessView
+
+
+class BeladyEviction(EvictionPolicy):
+    """Farthest-future-use victim selection over a :class:`NodeAccessView`.
+
+    ``view`` may be bound after construction (``attach_view``): the cache —
+    and its policy — outlive epochs, while the clairvoyant view is
+    installed per epoch by the driver.  Evictions can only happen after the
+    first insert, which follows the first ``begin_epoch`` on both
+    projections, so the view is always bound by the time it is consulted.
+    """
+
+    name = "belady"
+
+    def __init__(self, view: Optional[NodeAccessView] = None):
+        self.view = view
+
+    def attach_view(self, view: NodeAccessView) -> None:
+        self.view = view
+
+    def select_victim(
+        self,
+        entries: Iterable[SampleKey],
+        guard: Optional[Callable[[int], bool]],
+    ) -> Tuple[SampleKey, int]:
+        if self.view is None:
+            raise RuntimeError(
+                "BeladyEviction has no NodeAccessView bound; the epoch "
+                "driver installs one via attach_view()/begin_epoch before "
+                "any insert can evict"
+            )
+        victim: Optional[SampleKey] = None
+        victim_use = -1.0
+        fallback: Optional[SampleKey] = None  # unrestricted Belady choice
+        fallback_use = -1.0
+        guarded_uses: List[float] = []
+        for key in entries:  # FIFO order: first-seen maximum = oldest tie
+            use = self.view.next_use(key.index)
+            if fallback is None or use > fallback_use:
+                fallback, fallback_use = key, use
+            if guard is not None and guard(key.index):
+                guarded_uses.append(use)
+                continue
+            if victim is None or use > victim_use:
+                victim, victim_use = key, use
+        if victim is None:
+            assert fallback is not None, "select_victim on an empty cache"
+            return fallback, 0  # everything guarded: capacity wins
+        skips = sum(1 for use in guarded_uses if use > victim_use)
+        return victim, skips

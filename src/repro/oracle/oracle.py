@@ -1,0 +1,157 @@
+"""AccessOracle: the exact future access order of a seeded sampler.
+
+DL samplers are seeded PRNG permutations — the "randomness" of an epoch's
+access order is a pure function of ``(seed, epoch[, rank])``.  NoPFS
+(Dryden et al., "Clairvoyant Prefetching for Distributed Machine Learning
+I/O") builds its entire system on this observation: the *exact* sequence of
+future accesses is known before the epoch starts, so prefetch and eviction
+decisions can be provably optimal rather than heuristic.  This module is
+that knowledge, reified:
+
+  * :class:`NodeAccessView` — one rank's clairvoyant window: the current
+    epoch's exact order (fed by the epoch driver — hence exact for *every*
+    sampler, including the cache-view-dependent locality sampler) plus, for
+    replayable samplers, the next ``horizon`` epochs' orders replayed ahead
+    of time.  A consumption cursor advances sample by sample;
+    ``next_use(key)`` answers "when is this key needed again?" in O(1).
+  * :class:`AccessOracle` — the cluster-level factory: one view per rank,
+    each wired to replay that rank's registry-built sampler.
+
+Parity discipline (docs/PARITY.md): both projections construct their own
+oracle from identically-constructed samplers and drive the views through
+the same mirrored call points (``begin_epoch`` at epoch start,
+``on_consume`` per sample), so every ``next_use`` answer — and therefore
+every Belady eviction and every clairvoyant fetch round — is identical on
+both sides.
+
+Replayability: a sampler is replayable when its future orders are pure
+functions of the epoch (``partition``, ``shared-shuffle``, and the plain
+sequential/random samplers).  ``LocalityAwareSampler`` orders depend on
+cluster cache state at epoch start, which does not exist yet for future
+epochs — its views replay nothing and the oracle's horizon is the current
+epoch only (still exact: the driver feeds the realized order).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+#: "Never used again within the oracle's horizon" — compares greater than
+#: every real position, so unneeded keys are always the preferred victims.
+NEVER = float("inf")
+
+
+def replayable(sampler) -> bool:
+    """True when ``sampler``'s future epochs can be replayed ahead of time
+    (a pure function of the epoch).  Samplers whose order depends on
+    runtime cluster state — the locality sampler's ``update_cache_views``
+    hook is the marker — cannot be replayed without predicting that state,
+    so the oracle refuses rather than replaying a wrong future."""
+    return not hasattr(sampler, "update_cache_views")
+
+
+class NodeAccessView:
+    """One rank's exact future access sequence + consumption cursor.
+
+    ``begin_epoch(epoch, order)`` installs the epoch's realized order (and
+    appends any replayable future epochs up to the horizon); the driver
+    calls ``on_consume(idx)`` once per consumed sample — at the *start* of
+    the access, so a just-consumed key is immediately "in the past" and a
+    demand insert of it competes on its *next* occurrence, exactly Belady's
+    "don't cache what isn't needed soon" behaviour.
+
+    ``next_use(key)`` returns the key's next position in the concatenated
+    future sequence (an absolute index — only the ordering matters) or
+    :data:`NEVER`.  Positions are kept as ascending per-key lists; stale
+    heads (already consumed) are dropped lazily, so both queries and
+    consumption are O(1) amortized.
+    """
+
+    def __init__(
+        self,
+        future_orders: Optional[Callable[[int], Optional[Sequence[int]]]] = None,
+        horizon: int = 1,
+    ):
+        self._future = future_orders
+        self.horizon = horizon
+        self._positions: Dict[int, List[int]] = {}
+        self._cursor = 0
+        self.epoch = -1
+        #: How many epochs beyond the current one the view could see at the
+        #: last ``begin_epoch`` (0 for non-replayable samplers).
+        self.lookahead_epochs = 0
+
+    def begin_epoch(self, epoch: int, order: Sequence[int]) -> None:
+        """Install the epoch's exact order; replay up to ``self.horizon``
+        future epochs when the sampler allows it."""
+        self.epoch = epoch
+        segments: List[Sequence[int]] = [list(order)]
+        self.lookahead_epochs = 0
+        if self._future is not None:
+            for ahead in range(1, self.horizon + 1):
+                nxt = self._future(epoch + ahead)
+                if nxt is None:
+                    break
+                segments.append(nxt)
+                self.lookahead_epochs += 1
+        positions: Dict[int, List[int]] = {}
+        offset = 0
+        for seg in segments:
+            for i, key in enumerate(seg):
+                positions.setdefault(key, []).append(offset + i)
+            offset += len(seg)
+        self._positions = positions
+        self._cursor = 0
+
+    def on_consume(self, idx: int) -> None:
+        """Advance the cursor past one consumed sample (driver-mirrored on
+        both projections; ``idx`` is accepted for readability/debugging —
+        consumption follows the installed order by construction)."""
+        self._cursor += 1
+
+    def next_use(self, idx: int) -> float:
+        """Next future position of ``idx`` (>= cursor), or :data:`NEVER`."""
+        positions = self._positions.get(idx)
+        if not positions:
+            return NEVER
+        while positions and positions[0] < self._cursor:
+            positions.pop(0)  # lazily discard consumed occurrences
+        return positions[0] if positions else NEVER
+
+
+class AccessOracle:
+    """Cluster-level clairvoyance: one :class:`NodeAccessView` per rank.
+
+    Constructed from the per-rank samplers both projections already share
+    verbatim (``DataPlaneSpec.build_samplers`` / the ``samplers=`` argument
+    of ``simulate_cluster``).  Replaying a future epoch temporarily moves
+    the sampler's epoch and restores it — safe because every registered
+    replayable sampler's ``indices()`` is a pure function of its epoch.
+    """
+
+    def __init__(self, samplers: Sequence, horizon: int = 1):
+        if horizon < 0:
+            raise ValueError("horizon must be >= 0")
+        self.samplers = list(samplers)
+        self.horizon = horizon
+        self.views = [
+            NodeAccessView(self._replay_fn(rank), horizon=horizon)
+            for rank in range(len(self.samplers))
+        ]
+
+    def _replay_fn(self, rank: int) -> Optional[Callable[[int], Optional[List[int]]]]:
+        sampler = self.samplers[rank]
+        if not replayable(sampler):
+            return None
+
+        def future_order(epoch: int) -> Optional[List[int]]:
+            saved = sampler.epoch
+            try:
+                sampler.set_epoch(epoch)
+                return list(sampler.indices())
+            finally:
+                sampler.set_epoch(saved)
+
+        return future_order
+
+    def view(self, rank: int) -> NodeAccessView:
+        return self.views[rank]

@@ -1,0 +1,145 @@
+"""Clairvoyant prefetch scheduling: fetch rounds from the oracle, not knobs.
+
+The paper's pre-fetch service is driven by two hand-tuned knobs —
+``fetch_size`` and ``prefetch_threshold`` (``repro.core.policy``) — and its
+best setting (the 50/50 rule) was found by a parameter sweep.  NoPFS's
+observation applies here too: the sampler's exact future order is known, so
+the *schedule itself* can be derived instead of tuned.
+:class:`OraclePrefetchPlanner` is a drop-in replacement for
+``PrefetchPlanner`` (same ``(index, fetch_round_or_None)`` iteration
+protocol) that plans each round clairvoyantly:
+
+  * **deadline order** — rounds are prefixes of the exact future access
+    sequence, so every round is earliest-deadline-first by construction;
+  * **capacity-aware window** — announced-but-unconsumed keys never exceed
+    the cache capacity ``W``, so a fetch can never evict a sample that is
+    still needed before it (the Fig. 7 cache-churn regime is impossible by
+    construction); refills trigger at half a window, keeping the pipeline
+    full without the paper's threshold knob;
+  * **ramped round sizes** — sizes double from 1 up to the window: the
+    first sample's deadline is *now*, so the opening rounds are small
+    (nothing stalls behind a big bulk transfer), while steady-state rounds
+    grow to half-window for bulk-GET parallelism — this is what removes
+    the 50/50 schedule's cold-start stall;
+  * **residency filter** — keys already in the local cache (last epoch's
+    residue) are skipped at announce time: no re-fetched Class B GETs for
+    bytes the node already holds.  Cluster-resident keys are additionally
+    pulled from peers (never billed to Class B) by the peer partition the
+    shared ``LockstepPrefetchService.issue`` already performs — the planner
+    composes with it rather than duplicating it.
+
+Pure logic, no clocks, no I/O — the same discipline as
+``repro.core.policy`` — so both projections iterate the identical plan.
+``planner_for``/``make_planner_factory`` are THE construction points: the
+simulator (``NodeSimulator.begin_epoch``) and the lock-step runtime
+(``RuntimeCluster`` via ``DeliLoader(planner_factory=...)``) both build
+their epoch planner here, which is what keeps oracle specs inside the
+exact-parity domain (docs/PARITY.md).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.policy import PrefetchConfig, PrefetchPlanner
+
+
+def _window(capacity: Optional[int], n: int) -> int:
+    """The planner's look-ahead window: cache capacity, clamped to the
+    epoch (``None``/``-1`` = unlimited = the whole epoch)."""
+    if capacity is None or capacity < 0:
+        return max(1, n)
+    return max(1, min(capacity, n))
+
+
+class OraclePrefetchPlanner:
+    """Clairvoyant drop-in for ``PrefetchPlanner``.
+
+    Parameters
+    ----------
+    order: the epoch's exact access sequence (the oracle's knowledge).
+    capacity: local cache size in items (``None``/``-1`` = unlimited).
+    resident: optional predicate "is this key already cached locally?",
+        evaluated lazily at announce time — both projections evaluate it
+        against identical cache states at identical points, so the
+        filtered rounds agree exactly.
+
+    Iteration yields ``(index, round_or_None)`` exactly like
+    ``PrefetchPlanner``; a round whose keys are all resident collapses to
+    ``None`` (no listing, no worker time, no Class B).
+    """
+
+    def __init__(
+        self,
+        order: Sequence[int],
+        capacity: Optional[int] = None,
+        resident: Optional[Callable[[int], bool]] = None,
+    ):
+        self.order = list(order)
+        self.capacity = capacity
+        self.resident = resident
+        self.rounds_issued = 0
+        #: Keys skipped at announce time because they were already cached
+        #: locally (the re-fetches the heuristic planner would have paid).
+        self.resident_skips = 0
+
+    def __iter__(self) -> Iterator[Tuple[int, Optional[List[int]]]]:
+        n = len(self.order)
+        window = _window(self.capacity, n)
+        refill_at = window // 2  # announce when pending drops to half-window
+        announced = 0
+        consumed = 0
+        size = 1  # ramp: 1, 2, 4, ... — early deadlines never stall
+        while consumed < n:
+            round_: Optional[List[int]] = None
+            pending = announced - consumed
+            if announced < n and pending <= refill_at:
+                take = min(size, window - pending, n - announced)
+                chunk = self.order[announced : announced + take]
+                announced += len(chunk)
+                if size < window:
+                    size = min(size * 2, window)
+                if self.resident is not None:
+                    kept = [k for k in chunk if not self.resident(k)]
+                    self.resident_skips += len(chunk) - len(kept)
+                    chunk = kept
+                if chunk:
+                    round_ = chunk
+                    self.rounds_issued += 1
+            yield self.order[consumed], round_
+            consumed += 1
+
+
+def planner_for(
+    order: Sequence[int],
+    *,
+    policy: str,
+    config: Optional[PrefetchConfig],
+    capacity: Optional[int] = None,
+    resident: Optional[Callable[[int], bool]] = None,
+):
+    """THE epoch-planner construction, shared verbatim by both projections.
+
+    ``policy="paper"`` builds the heuristic ``PrefetchPlanner`` from the
+    fetch-size/threshold ``config``; ``policy="oracle"`` builds the
+    clairvoyant planner (``config`` is ignored — the oracle has no knobs).
+    """
+    if policy == "oracle":
+        return OraclePrefetchPlanner(order, capacity=capacity, resident=resident)
+    if policy != "paper":
+        raise ValueError(f"unknown prefetch policy {policy!r}; expected 'paper' or 'oracle'")
+    if config is None:
+        config = PrefetchConfig.disabled()
+    return PrefetchPlanner(order, config)
+
+
+def make_planner_factory(
+    *,
+    policy: str,
+    config: Optional[PrefetchConfig],
+    capacity: Optional[int] = None,
+    resident: Optional[Callable[[int], bool]] = None,
+) -> Callable[[Sequence[int]], object]:
+    """Bind everything but the epoch order (``DeliLoader.planner_factory``)."""
+    return lambda order: planner_for(
+        order, policy=policy, config=config, capacity=capacity, resident=resident
+    )

@@ -22,6 +22,15 @@ barrier arithmetic lives once in ``repro.core.lockstep`` and straggler
 scaling rebuilds the calibrated models through the same ``NodeProfile``
 methods on both sides.
 
+Since ISSUE 5 the oracle data plane is in scope too:
+``eviction="belady"`` and ``prefetch_policy="oracle"`` specs stay exact
+because the clairvoyant machinery is, again, ONE implementation —
+``repro.oracle``'s ``NodeAccessView`` cursor is advanced by mirrored
+driver lines, ``BeladyEviction`` is a pure function of cache state +
+``next_use``, and both projections build their epoch planner through the
+same ``repro.oracle.planner.planner_for`` call — composed with every
+schedule knob above (batch sync, sub-step events, stragglers).
+
 ``assert_parity`` checks exactly that, driving ``build_runtime()`` in its
 default lock-step mode.  Since the lock-step scheduler landed, specs with
 **prefetching enabled are in scope**: service completions are virtual-time

@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import shutil
 import tempfile
+import warnings as _warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.bandwidth import (
@@ -58,7 +59,7 @@ from repro.core.lockstep import (
     drive_interleaved_epoch,
     peer_probe_payload,
 )
-from repro.core.policy import PrefetchConfig
+from repro.core.policy import PrefetchConfig, validate_config_against_cache
 from repro.core.prefetcher import PrefetchService
 from repro.core.simulator import SimConfig, simulate_cluster
 from repro.core.store import (
@@ -69,7 +70,16 @@ from repro.core.store import (
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
+from repro.oracle import AccessOracle, BeladyEviction, make_planner_factory
 from repro.pipeline.tiers import DiskSourceTier
+
+
+class DataPlaneConfigWarning(UserWarning):
+    """A spec is internally consistent but encodes a configuration the
+    paper's findings flag as wasteful (``repro.core.policy.
+    validate_config_against_cache``) — surfaced at construction so spec
+    users see it, instead of the warnings living unreachably in the pure
+    logic layer (ISSUE 5 satellite)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +120,22 @@ class DataPlaneSpec:
         multiplicative compute/bandwidth slowdowns folded into each node's
         calibrated models on BOTH projections, so heterogeneous clusters
         stay inside the exact-parity domain.
+    eviction: cache victim selection (ISSUE 5).  ``"fifo"`` (default) is
+        the paper's capped-collection order; ``"belady"`` plugs
+        farthest-future-use eviction (``repro.oracle.BeladyEviction``) —
+        the offline-optimal policy, implementable because the seeded
+        sampler's future order is known.  Needs a cache, bucket source.
+    prefetch_policy: fetch-round planning (ISSUE 5).  ``"paper"`` (default)
+        uses the ``prefetch`` knobs; ``"oracle"`` replaces them with the
+        clairvoyant ``OraclePrefetchPlanner`` (deadline-ordered,
+        capacity-windowed, residency-filtered rounds — leave
+        ``prefetch=None``).  Needs a cache, bucket source, and the
+        lock-step runtime (a free-running threaded service has no
+        deterministic cursor for the oracle to trust).
+
+    Construction warns (``DataPlaneConfigWarning``) when the prefetch knobs
+    are inconsistent with the cache size per the paper's findings —
+    ``validate_config_against_cache`` surfaced at the spec layer.
 
     Construction helpers: ``from_sim_config`` lifts a legacy ``SimConfig``;
     ``repro.pipeline.condition(name, workload)`` builds registered
@@ -130,6 +156,8 @@ class DataPlaneSpec:
     sync: str = "epoch"  # "epoch" | "batch" (per-batch allreduce barriers)
     granularity: str = "step"  # "step" | "substep" (event decomposition)
     nodes: Optional[Tuple[NodeProfile, ...]] = None  # per-rank straggler profiles
+    eviction: str = "fifo"  # "fifo" | "belady" (clairvoyant, ISSUE 5)
+    prefetch_policy: str = "paper"  # "paper" | "oracle" (clairvoyant, ISSUE 5)
     seed: int = 0
     # Calibrated models (Table I defaults; override for fast-forwarded runs).
     bucket: BucketModel = DEFAULT_BUCKET
@@ -157,6 +185,22 @@ class DataPlaneSpec:
             raise ValueError("sync='batch' requires the interleaved schedule")
         if self.granularity == "substep" and not self.interleaved:
             raise ValueError("granularity='substep' requires the interleaved schedule")
+        # Eviction / prefetch-policy rules (unknown values, belady/oracle
+        # need a cache and the bucket source, the oracle has no knobs) live
+        # ONCE in SimConfig.__post_init__; constructing the sim projection
+        # validates them here too, so the two surfaces cannot drift.
+        self.to_sim_config()
+        # ISSUE 5 satellite: the pure-logic configuration lint
+        # (core/policy.py) fires at spec construction, where users actually
+        # are.  The spec's cache_items is authoritative for the check.
+        if self.prefetch is not None and self.prefetch.enabled:
+            check_cfg = self.prefetch
+            if isinstance(self.cache_items, int) and self.cache_items > 0:
+                check_cfg = dataclasses.replace(
+                    check_cfg, cache_items=self.cache_items
+                )
+            for msg in validate_config_against_cache(check_cfg):
+                _warnings.warn(msg, DataPlaneConfigWarning, stacklevel=3)
         if self.nodes is not None:
             if not isinstance(self.nodes, tuple):
                 object.__setattr__(self, "nodes", tuple(self.nodes))
@@ -193,6 +237,8 @@ class DataPlaneSpec:
             replication_aware_eviction=self.replication_aware_eviction,
             sync=self.sync,
             granularity=self.granularity,
+            eviction=self.eviction,
+            prefetch_policy=self.prefetch_policy,
         )
 
     @classmethod
@@ -213,6 +259,8 @@ class DataPlaneSpec:
             replication_aware_eviction=cfg.replication_aware_eviction,
             sync=cfg.sync,
             granularity=cfg.granularity,
+            eviction=cfg.eviction,
+            prefetch_policy=cfg.prefetch_policy,
             seed=seed,
             **overrides,
         )
@@ -327,6 +375,17 @@ class RuntimeCluster:
                 "runtime (build_runtime() with no clock); the free-running "
                 "threaded mode cannot implement them"
             )
+        if not self.lockstep and (
+            spec.eviction == "belady" or spec.prefetch_policy == "oracle"
+        ):
+            # Same policy for the oracle data plane: the clairvoyant cursor
+            # advances with the deterministic event schedule; a worker
+            # thread racing the loop would make Belady/oracle decisions
+            # nondeterministic — restrict loudly rather than approximate.
+            raise ValueError(
+                "eviction='belady' / prefetch_policy='oracle' need the "
+                "lock-step runtime (build_runtime() with no clock)"
+            )
         w = spec.workload
         # Per-node clocks: fresh VirtualClocks in lock-step mode, the one
         # shared clock in free-running mode.
@@ -337,10 +396,9 @@ class RuntimeCluster:
         payloads = spec.build_payloads()
         self._payloads = payloads
         self._disk_root: Optional[str] = None
-        prefetch_on = (
-            spec.source == "bucket"
-            and spec.prefetch is not None
-            and spec.prefetch.enabled
+        prefetch_on = spec.source == "bucket" and (
+            (spec.prefetch is not None and spec.prefetch.enabled)
+            or spec.prefetch_policy == "oracle"
         )
         self.registry: Optional[PeerCacheRegistry] = (
             PeerCacheRegistry(replication_aware=spec.replication_aware_eviction)
@@ -351,6 +409,13 @@ class RuntimeCluster:
         self.disks: List[FileSystemStore] = []
         self.caches: List[Optional[CappedCache]] = []
         self.samplers: List = spec.build_samplers()
+        # Clairvoyant views (ISSUE 5): the same AccessOracle construction
+        # simulate_cluster performs over its identically-built samplers.
+        self.oracle: Optional[AccessOracle] = (
+            AccessOracle(self.samplers)
+            if spec.eviction == "belady" or spec.prefetch_policy == "oracle"
+            else None
+        )
         self.services: List = []
         self.loaders: List[DeliLoader] = []
         # Per-node straggler-scaled models and modelled loop costs: the same
@@ -396,7 +461,14 @@ class RuntimeCluster:
                 cache = None
                 if spec.cache_items is not None:
                     max_items = None if spec.cache_items == -1 else spec.cache_items
-                    cache = CappedCache(max_items=max_items)
+                    cache = CappedCache(
+                        max_items=max_items,
+                        eviction_policy=(
+                            BeladyEviction(self.oracle.view(rank))
+                            if spec.eviction == "belady"
+                            else None
+                        ),
+                    )
                 store = bucket
                 if self.registry is not None:
                     assert cache is not None  # enforced by spec validation
@@ -438,14 +510,33 @@ class RuntimeCluster:
                             list_every_fetch=spec.list_every_fetch,
                             streaming_insert=spec.streaming_insert,
                         )
+            planner_factory = None
+            if prefetch_on and spec.prefetch_policy == "oracle":
+                assert cache is not None  # enforced by spec validation
+                # THE shared planner construction (repro.oracle.planner) —
+                # NodeSimulator.begin_epoch builds through the same call.
+                planner_factory = make_planner_factory(
+                    policy="oracle",
+                    config=None,
+                    capacity=spec.cache_items,
+                    resident=cache.contains,
+                )
             loader = DeliLoader(
                 dataset,
                 self.samplers[rank],
                 batch_size=w.batch_size,
-                config=spec.prefetch if prefetch_on else PrefetchConfig.disabled(),
+                config=(
+                    spec.prefetch
+                    if prefetch_on and spec.prefetch is not None
+                    else PrefetchConfig.disabled()
+                ),
                 service=service,
                 clock=node_clock,
                 node=rank,
+                planner_factory=planner_factory,
+                oracle_view=(
+                    self.oracle.view(rank) if self.oracle is not None else None
+                ),
             )
             self.caches.append(cache)
             self.services.append(service)

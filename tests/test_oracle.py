@@ -1,0 +1,488 @@
+"""ISSUE 5 tentpole: the oracle data plane — clairvoyant access views,
+Belady (farthest-future-use) eviction as a pluggable policy, the
+OraclePrefetchPlanner, and exact sim/runtime parity for oracle specs."""
+import dataclasses
+import warnings
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import (
+    MNIST,
+    CappedCache,
+    DistributedPartitionSampler,
+    FifoEviction,
+    PrefetchConfig,
+    RealClock,
+    SimConfig,
+    straggler_profiles,
+)
+from repro.distributed import PeerCacheRegistry
+from repro.oracle import (
+    NEVER,
+    AccessOracle,
+    BeladyEviction,
+    NodeAccessView,
+    OraclePrefetchPlanner,
+    planner_for,
+    replayable,
+)
+from repro.pipeline import DataPlaneSpec, assert_parity, condition
+from repro.pipeline.spec import DataPlaneConfigWarning
+
+
+# ---------------------------------------------------------------------------
+# NodeAccessView / AccessOracle.
+# ---------------------------------------------------------------------------
+def test_view_next_use_follows_cursor():
+    view = NodeAccessView()
+    view.begin_epoch(0, [3, 1, 4, 1, 5])
+    assert view.next_use(3) == 0
+    assert view.next_use(1) == 1
+    assert view.next_use(9) == NEVER
+    view.on_consume(3)
+    view.on_consume(1)
+    assert view.next_use(3) == NEVER  # consumed, never reused this horizon
+    assert view.next_use(1) == 3  # the second occurrence
+    view.on_consume(4)
+    view.on_consume(1)
+    assert view.next_use(1) == NEVER
+    assert view.next_use(5) == 4
+
+
+def test_access_oracle_replays_future_epochs():
+    """The partition sampler is a pure function of its epoch, so the view
+    sees the NEXT epoch's exact order too: a key consumed this epoch has a
+    finite next_use at (this-epoch length + its epoch-1 position)."""
+    sampler = DistributedPartitionSampler(60, rank=0, world=3, seed=5)
+    assert replayable(sampler)
+    oracle = AccessOracle([sampler], horizon=1)
+    view = oracle.view(0)
+    sampler.set_epoch(0)
+    order0 = sampler.indices()
+    view.begin_epoch(0, order0)
+    assert view.lookahead_epochs == 1
+    assert sampler.epoch == 0  # replay restored the sampler's epoch
+    sampler.set_epoch(1)
+    order1 = sampler.indices()
+    sampler.set_epoch(0)
+    for idx in order0:
+        view.on_consume(idx)
+    for idx in order0:
+        if idx in order1:
+            assert view.next_use(idx) == len(order0) + order1.index(idx)
+        else:
+            assert view.next_use(idx) == NEVER
+
+
+def test_locality_sampler_is_not_replayed():
+    """Locality orders depend on future cache views that do not exist yet;
+    the oracle must refuse to replay a wrong future (current-epoch horizon
+    only — still exact, the driver feeds the realized order)."""
+    from repro.core import LocalityAwareSampler
+
+    sampler = LocalityAwareSampler(60, rank=0, world=3, seed=0)
+    assert not replayable(sampler)
+    oracle = AccessOracle([sampler])
+    view = oracle.view(0)
+    view.begin_epoch(0, [1, 2, 3])
+    assert view.lookahead_epochs == 0
+    assert view.next_use(1) == 0 and view.next_use(7) == NEVER
+
+
+# ---------------------------------------------------------------------------
+# OraclePrefetchPlanner invariants (seed-swept).
+# ---------------------------------------------------------------------------
+@settings(max_examples=20)
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    capacity=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_oracle_planner_invariants(n, capacity, seed):
+    """Every index yields exactly once in order; announced-but-unconsumed
+    never exceeds the window (no fetch can evict a still-needed sample);
+    rounds are deadline-ordered prefixes of the future sequence."""
+    import random
+
+    order = list(range(n))
+    random.Random(seed).shuffle(order)
+    planner = OraclePrefetchPlanner(order, capacity=capacity)
+    window = min(capacity, n)
+    consumed, announced_keys = [], []
+    pending_high = 0
+    for idx, round_ in planner:
+        if round_ is not None:
+            announced_keys += round_
+        consumed.append(idx)
+        pending_high = max(pending_high, len(announced_keys) - len(consumed) + 1)
+    assert consumed == order
+    assert announced_keys == order  # every key fetched once, in deadline order
+    assert pending_high <= window
+    assert planner.rounds_issued >= 1
+
+
+@settings(max_examples=15)
+@given(
+    resident_mask=st.integers(min_value=0, max_value=(1 << 16) - 1),
+    capacity=st.integers(min_value=2, max_value=20),
+)
+def test_oracle_planner_filters_resident_keys(resident_mask, capacity):
+    """Keys already cached at announce time are skipped (no re-fetched
+    Class B); everything else is announced exactly once."""
+    n = 16
+    resident = {k for k in range(n) if resident_mask >> k & 1}
+    planner = OraclePrefetchPlanner(
+        list(range(n)), capacity=capacity, resident=resident.__contains__
+    )
+    announced = [k for _, r in planner if r is not None for k in r]
+    assert set(announced) == set(range(n)) - resident
+    assert planner.resident_skips == len(resident)
+
+
+def test_planner_for_is_the_shared_construction():
+    p = planner_for([1, 2, 3], policy="oracle", config=None, capacity=2)
+    assert isinstance(p, OraclePrefetchPlanner)
+    from repro.core import PrefetchPlanner
+
+    p = planner_for([1, 2, 3], policy="paper", config=PrefetchConfig(fetch_size=2))
+    assert isinstance(p, PrefetchPlanner)
+    with pytest.raises(ValueError):
+        planner_for([1], policy="psychic", config=None)
+
+
+# ---------------------------------------------------------------------------
+# Belady eviction invariants (seed-swept, ISSUE 5 satellite).
+# ---------------------------------------------------------------------------
+class _RecordingBelady(BeladyEviction):
+    """Instrument victim selection: snapshot (victim, kept) next-uses."""
+
+    def __init__(self, view):
+        super().__init__(view)
+        self.decisions = []
+
+    def select_victim(self, entries, guard):
+        uses = {key.index: self.view.next_use(key.index) for key in entries}
+        victim, skips = super().select_victim(entries, guard)
+        self.decisions.append((victim.index, uses, guard))
+        return victim, skips
+
+
+@settings(max_examples=20)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    capacity=st.integers(min_value=1, max_value=12),
+)
+def test_belady_never_evicts_a_key_reused_sooner_than_a_kept_key(seed, capacity):
+    """THE Belady invariant: at every eviction, the victim's next use is
+    >= every kept (unguarded) entry's next use — over synthetic sequences
+    WITH within-epoch reuse, driven through a real CappedCache."""
+    import random
+
+    rng = random.Random(seed)
+    order = [rng.randrange(24) for _ in range(120)]
+    view = NodeAccessView()
+    view.begin_epoch(0, order)
+    policy = _RecordingBelady(view)
+    cache = CappedCache(max_items=capacity, eviction_policy=policy)
+    for idx in order:
+        view.on_consume(idx)
+        if cache.get(idx) is None:
+            cache.put(idx, b"x")
+    assert policy.decisions, "capacity pressure must have evicted something"
+    for victim, uses, _ in policy.decisions:
+        assert all(uses[victim] >= use for use in uses.values()), (
+            f"victim {victim} (next_use {uses[victim]}) evicted before "
+            f"a farther-future key: {uses}"
+        )
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fifo_and_belady_agree_when_capacity_covers_working_set(seed):
+    """With capacity >= the whole working set nothing is ever evicted, so
+    the two policies must produce byte-identical outcomes."""
+    w = dataclasses.replace(MNIST.scaled(0.02), n_nodes=3)
+    results = {}
+    for eviction in ("fifo", "belady"):
+        spec = DataPlaneSpec(
+            workload=w, cache_items=w.n_samples, eviction=eviction, seed=seed % 7
+        )
+        stats, store = spec.build_sim().run(epochs=2)
+        results[eviction] = (
+            [(s.epoch, s.node, s.samples, s.tier_hits, s.data_wait_seconds) for s in stats],
+            store.class_b_requests,
+        )
+    assert results["fifo"] == results["belady"]
+
+
+def test_replication_guard_declines_last_copy_under_belady():
+    """ISSUE 5 satellite: the Hoard-style guard composes with Belady — the
+    farthest-future victim is skipped when it is the last cluster-resident
+    copy, and ``guard_skips`` counts the redirect."""
+    reg = PeerCacheRegistry(replication_aware=True)
+    view = NodeAccessView()
+    # Future: 1 is needed soon, 2 later, 3 soonest; 9 is never needed.
+    view.begin_epoch(0, [3, 1, 2])
+    c0 = CappedCache(max_items=3, eviction_policy=BeladyEviction(view))
+    c1 = CappedCache(max_items=3)
+    reg.register(0, c0)
+    reg.register(1, c1)
+    c0.put(9, b"x")  # Belady victim (never used again) — but last copy
+    c0.put(1, b"x")
+    c1.put(1, b"x")  # 1 is replicated: evictable without cluster data loss
+    c0.put(2, b"x")
+    c0.put(3, b"x")  # over capacity: Belady says 9, guard redirects
+    assert c0.contains(9)  # last cluster copy survived
+    assert not c0.contains(1)  # farthest-future *replicated* entry went
+    assert c0.contains(2) and c0.contains(3)
+    # Two protections outranked the victim in Belady order (9: never
+    # reused; 2: reused later than 1) — both redirects are counted.
+    assert c0.stats.guard_skips == 2
+
+
+def test_belady_all_guarded_falls_back_to_unrestricted_choice():
+    view = NodeAccessView()
+    view.begin_epoch(0, [1, 2])
+    cache = CappedCache(max_items=2, eviction_policy=BeladyEviction(view))
+    cache.eviction_guard = lambda idx: True  # everything is a last copy
+    cache.put(1, b"a")
+    cache.put(2, b"b")
+    cache.put(3, b"c")  # 3 unneeded: it IS the unrestricted Belady victim
+    assert not cache.contains(3)
+    assert cache.contains(1) and cache.contains(2)
+    assert cache.stats.guard_skips == 0  # capacity fallback, no redirect
+
+
+def test_belady_without_view_raises():
+    cache = CappedCache(max_items=1, eviction_policy=BeladyEviction())
+    cache.put(1, b"a")
+    with pytest.raises(RuntimeError):
+        cache.put(2, b"b")
+
+
+def test_fifo_eviction_policy_is_the_default():
+    cache = CappedCache(max_items=2)
+    assert isinstance(cache.eviction_policy, FifoEviction)
+    cache.put(1, b"a")
+    cache.put(2, b"b")
+    cache.put(3, b"c")
+    assert not cache.contains(1)  # oldest insert went first
+
+
+# ---------------------------------------------------------------------------
+# Spec surface: validation, labels, warnings (ISSUE 5 satellite).
+# ---------------------------------------------------------------------------
+def test_oracle_spec_validation():
+    w = MNIST.scaled(0.02)
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, eviction="belady")  # needs a cache
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, prefetch_policy="oracle")  # needs a cache
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, source="disk", cache_items=8, eviction="belady")
+    with pytest.raises(ValueError):  # the oracle has no knobs
+        DataPlaneSpec(
+            workload=w,
+            cache_items=64,
+            prefetch_policy="oracle",
+            prefetch=PrefetchConfig.fifty_fifty(64),
+        )
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=64, eviction="lru")
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=64, prefetch_policy="psychic")
+    # The free-running threaded runtime has no deterministic cursor.
+    spec = condition("oracle", w, cache_items=64)
+    with pytest.raises(ValueError):
+        spec.build_runtime(clock=RealClock(scale=1e-4))
+
+
+def test_oracle_labels_and_sim_config_round_trip():
+    w = MNIST.scaled(0.02)
+    spec = condition("oracle+peer", w, cache_items=64)
+    assert "+belady" in spec.label() and "+pf(oracle)" in spec.label()
+    cfg = spec.to_sim_config()
+    assert cfg.eviction == "belady" and cfg.prefetch_policy == "oracle"
+    assert DataPlaneSpec.from_sim_config(w, cfg).to_sim_config() == cfg
+    with pytest.raises(ValueError):
+        SimConfig(cache_items=64, prefetch_policy="oracle",
+                  prefetch=PrefetchConfig.fifty_fifty(64))
+
+
+def test_spec_construction_surfaces_policy_warnings():
+    """ISSUE 5 satellite: the pure-logic config lint (core/policy.py) now
+    fires at DataPlaneSpec construction — cache smaller than fetch size is
+    the paper's Fig. 7 churn regime and warns; the 50/50 point does not."""
+    w = MNIST.scaled(0.02)
+    with pytest.warns(DataPlaneConfigWarning, match="fetch"):
+        DataPlaneSpec(
+            workload=w, cache_items=32, prefetch=PrefetchConfig(fetch_size=64)
+        )
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DataPlaneConfigWarning)
+        DataPlaneSpec(
+            workload=w, cache_items=128, prefetch=PrefetchConfig.fifty_fifty(128)
+        )
+        condition("oracle", w, cache_items=128)  # the oracle has no knobs
+
+
+# ---------------------------------------------------------------------------
+# Exact sim/runtime parity for oracle specs (acceptance criterion).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["belady-only", "oracle", "oracle+peer"])
+@pytest.mark.parametrize(
+    "schedule",
+    [
+        {},
+        dict(sync="batch"),
+        dict(granularity="substep"),
+        dict(
+            sync="batch",
+            granularity="substep",
+            nodes=straggler_profiles(3, (0,), 2.0, 2.0),
+        ),
+    ],
+    ids=["epoch-step", "batch", "substep", "batch+substep+straggler"],
+)
+def test_oracle_parity_exact(name, schedule):
+    """assert_parity passes with exact == (per-tier hits, Class A+B,
+    data-wait, allreduce waits) for Belady-eviction and oracle-prefetch
+    specs under every cluster schedule — extended by sharing the
+    implementation (repro.oracle built by both projections), never by
+    tolerances."""
+    spec = condition(name, MNIST.scaled(0.02), cache_items=200, **schedule)
+    report = assert_parity(spec, epochs=2)
+    assert report.sim_samples == report.runtime_samples
+    if name != "belady-only":
+        assert report.sim_tiers.get("ram", 0) > 0  # clairvoyant rounds hit
+
+
+def test_oracle_parity_with_shared_shuffle_and_locality():
+    """The oracle derives exact orders from ANY registry sampler: the
+    Hoard-style shared-shuffle regime (full dataset per node, replayable)
+    and the locality-aware order (not replayable — current-epoch horizon)
+    both stay parity-exact."""
+    w = MNIST.scaled(0.02)
+    for sampler in ("shared-shuffle", "locality"):
+        spec = condition("oracle", w, cache_items=200, sampler=sampler)
+        assert_parity(spec, epochs=2)
+
+
+def test_oracle_beats_heuristics_at_equal_capacity():
+    """Pin fig12's claims at test scale: clairvoyant prefetch data-wait <=
+    demand and <= the paper's best heuristic (50/50), and Belady Class B <=
+    FIFO Class B under cache pressure, at equal capacity."""
+    w = MNIST.scaled(0.02)
+    C = w.partition_size // 2  # real cache pressure
+
+    def run(name, **kw):
+        stats, store = condition(name, w, cache_items=C, **kw).build_sim().run(epochs=2)
+        return sum(s.data_wait_seconds for s in stats), store.class_b_requests
+
+    demand_wait, demand_b = run("cache")
+    belady_wait, belady_b = run("belady-only")
+    fifty_wait, _ = run("fifty-fifty")
+    oracle_wait, oracle_b = run("oracle")
+    assert belady_b <= demand_b
+    assert belady_wait <= demand_wait
+    assert oracle_wait <= fifty_wait
+    assert oracle_wait <= demand_wait
+
+
+def test_oracle_loader_mid_epoch_resume_no_rebilling(payloads_1k):
+    """Mid-epoch checkpoint/restore with the clairvoyant planner: the
+    resumed loader replays announced rounds (``replay=True`` filters
+    still-cached keys — no re-billed Class B), the oracle cursor re-syncs
+    through the replay branch, and the remainder is consumed exactly
+    once."""
+    from repro.core import (
+        CachingDataset,
+        DeliLoader,
+        LockstepPrefetchService,
+        SimulatedBucketStore,
+        VirtualClock,
+    )
+    from repro.oracle import make_planner_factory
+
+    n = len(payloads_1k)
+    clock = VirtualClock()
+    store = SimulatedBucketStore(payloads_1k, clock=clock)
+    sampler = DistributedPartitionSampler(n, 0, 1, seed=0)
+    view = AccessOracle([sampler]).view(0)
+    cache = CappedCache(eviction_policy=BeladyEviction(view))  # unlimited
+    from repro.core import DEFAULT_BUCKET, DEFAULT_NETWORK
+
+    svc = LockstepPrefetchService(
+        cache,
+        sample_bytes=1024,
+        n_samples=n,
+        bucket=DEFAULT_BUCKET,
+        network=DEFAULT_NETWORK,
+        store_stats=store.stats,
+        payload_for=payloads_1k.__getitem__,
+        clock=clock,
+        list_every_fetch=False,
+    )
+    ds = CachingDataset(store, cache, insert_on_miss=False)
+    factory = make_planner_factory(policy="oracle", config=None, resident=cache.contains)
+
+    def fresh_loader():
+        return DeliLoader(
+            ds,
+            sampler,
+            16,
+            PrefetchConfig.disabled(),
+            service=svc,
+            clock=clock,
+            planner_factory=factory,
+            oracle_view=view,
+        )
+
+    loader = fresh_loader()
+    loader.set_epoch(0)
+    it = iter(loader)
+    first = [next(it) for _ in range(4)]
+    svc.advance_to(float("inf"))  # in-flight rounds land before the crash
+    state = loader.state_dict()
+    it.close()  # simulated crash mid-epoch
+    loader2 = fresh_loader()
+    loader2.load_state_dict(state)
+    rest = list(loader2)
+    svc.advance_to(float("inf"))  # land the epoch's trailing rounds
+    consumed = [i for b in first + rest for i in b.indices]
+    assert sorted(consumed) == sorted(payloads_1k)
+    assert len(consumed) == len(set(consumed))
+    # Replayed rounds were fully resident (unlimited cache, drained before
+    # the crash): the service round-fetched every key exactly once despite
+    # the restart, and every Class B GET is accounted — one round GET per
+    # key plus the demand GETs that raced in-flight rounds.
+    assert svc.samples_fetched == n
+    demand_gets = sum(b.misses for b in first) + (
+        loader2.last_epoch_stats.tier("bucket")
+    )
+    assert store.stats.class_b_requests == n + demand_gets
+
+
+def test_oracle_peer_rounds_never_bill_class_b_for_cluster_resident_keys():
+    """The planner composes with the shared service's peer partition: with
+    an unlimited cache and the shared-shuffle regime, epoch-2 rounds pull
+    cluster-resident keys from peers — strictly fewer Class B than the
+    peer-less oracle at equal capacity."""
+    w = MNIST.scaled(0.02)
+    _, solo = (
+        condition("oracle", w, cache_items=300).build_sim().run(epochs=2)
+    )
+    stats, peer = (
+        condition("oracle+peer", w, cache_items=300).build_sim().run(epochs=2)
+    )
+    assert peer.class_b_requests < solo.class_b_requests
+    from repro.core import aggregate_tier_hits
+
+    assert aggregate_tier_hits(stats).get("peer", 0) > 0
