@@ -51,7 +51,13 @@ def run(fast: bool = False) -> dict:
             cache_items = max(1, int(part * frac))
             results = {}
             for mode in MODES:
-                r = run_named(mode, spec, epochs=2, seed=0, cache_items=cache_items)
+                # Vector engine (ISSUE 6): exact == results; these peer
+                # conditions fall back to scalar stepping per node, but the
+                # spec-level switch keeps figs. 10-12 on one engine setting.
+                r = run_named(
+                    mode, spec, epochs=2, seed=0,
+                    cache_items=cache_items, engine="vector",
+                )
                 results[mode] = {
                     "class_b": r["store"].class_b_requests,
                     "wait": mean((r["wait_e1"], r["wait_e2"])),
@@ -106,7 +112,7 @@ def run(fast: bool = False) -> dict:
     half = max(1, spec4.partition_size // 2)
     delta_rows = []
     for tag, plane in (
-        ("peer (no pf)", condition("cache+peer", spec4, cache_items=half)),
+        ("peer (no pf)", condition("cache+peer", spec4, cache_items=half, engine="vector")),
         (
             "peer + 50/50 pf",
             condition(
@@ -114,6 +120,7 @@ def run(fast: bool = False) -> dict:
                 spec4,
                 cache_items=half,
                 prefetch=PrefetchConfig.fifty_fifty(half),
+                engine="vector",
             ),
         ),
     ):
@@ -168,6 +175,7 @@ def run(fast: bool = False) -> dict:
     rows.extend(delta_rows)
     return {
         "name": "Fig. 10 — cooperative peer-cache tier (beyond-paper)",
+        "engine": "vector",
         "table": fmt_table(
             [
                 "cluster",

@@ -49,7 +49,9 @@ def _conditions(fast: bool):
     w = dataclasses.replace(MNIST.scaled(0.05 if fast else 0.1), n_nodes=4)
     half = max(2, w.partition_size // 2)
     profs = straggler_profiles(w.n_nodes, (SLOW_RANK,), SLOWDOWN, SLOWDOWN)
-    base = dict(workload=w, cache_items=half, nodes=profs)
+    # Vector engine (ISSUE 6): exact == results (tests/test_engine_
+    # equivalence.py); the peer conditions fall back to scalar per node.
+    base = dict(workload=w, cache_items=half, nodes=profs, engine="vector")
     return w, [
         ("local cache", DataPlaneSpec(**base)),
         ("peer", DataPlaneSpec(peer_cache=True, **base)),
@@ -168,6 +170,7 @@ def run(fast: bool = False) -> dict:
             )
     return {
         "name": "Fig. 11 — stragglers under per-batch allreduce barriers (beyond-paper)",
+        "engine": "vector",
         "table": fmt_table(
             [
                 "condition / sync",

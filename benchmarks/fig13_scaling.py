@@ -1,0 +1,211 @@
+"""Fig. 13 (beyond-paper): simulator weak-scaling — the vectorized segment
+engine vs the scalar event engine (ISSUE 6).
+
+Figs. 3-12 measure the *modelled* system; this figure measures the
+simulator itself.  The scalar engine pays one heap event (plus Python-level
+cost arithmetic) per sample per node, so a modelled epoch costs O(samples x
+log nodes) host work — fine at the paper's 3-node scale, painful at
+hundreds of nodes.  The vector engine (``repro.engine.vector``) advances
+each node's between-interaction *segment* — the run of demand reads between
+prefetch-round completions, announce points, and batch/epoch barriers — as
+batched numpy array ops, keeping the event heap only for cross-node
+interactions.  Because both engines share the per-sample cost kernel
+(``repro.engine.kernels``) and the vector engine accumulates with
+sequential ``np.cumsum`` scans, results are bit-for-bit ``==`` identical
+(docs/PARITY.md) — asserted here at every sweep point, not within a
+tolerance.
+
+The sweep holds per-node work fixed (weak scaling: 2 000 samples per node)
+and grows the cluster, on two conditions bracketing the engine's win:
+
+  * ``gcp-direct`` — no cache state at all: whole inter-barrier spans
+    vectorize, the speedup is the pure event-loop overhead;
+  * ``50/50`` — the paper's best prefetch configuration: segments end at
+    announce points and round completions, and cache membership still
+    evolves through the real ``CappedCache`` (exactness over speed), so
+    the speedup is smaller but the condition is the paper's data plane.
+
+Claim checks:
+
+  * scalar and vector results are exactly ``==`` at every sweep point
+    (tier hits, Class A/B, bytes, per-node stat tuples);
+  * >= 10x speedup (>= 3x under ``--fast``'s smaller sweep, where the
+    scalar baseline runs milliseconds and timing noise dominates) on the
+    best condition at the largest node count — typically ``50/50``,
+    where the scalar engine also pays planner/cache Python work per
+    sample, with ``gcp-direct`` reported alongside;
+  * a 100-node, 10^6-sample epoch on the 50/50 data plane completes in
+    seconds (<= 60 s wall-clock) under the vector engine — the scale the
+    scalar engine made impractical to sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import check, fmt_table
+from repro.core import MNIST, aggregate_tier_hits
+from repro.pipeline import condition
+
+#: Weak scaling: fixed per-node partition, growing cluster.
+PER_NODE_SAMPLES = 2000
+SWEEP_FULL = (2, 10, 50, 100)
+SWEEP_FAST = (2, 10, 20)
+#: The big-epoch claim point (full mode): 100 nodes, 10^6 samples.
+BIG_FULL = (100, 1_000_000)
+BIG_FAST = (20, 100_000)
+SPEEDUP_FLOOR_FULL = 10.0
+SPEEDUP_FLOOR_FAST = 3.0
+
+
+def _workload(n_nodes: int, n_samples: int):
+    """MNIST cost ratios (sample bytes, per-batch compute) at an arbitrary
+    dataset/cluster shape; per-node compute stays MNIST's per-partition
+    figure, so weak scaling holds the modelled per-node work fixed."""
+    return dataclasses.replace(
+        MNIST, name=f"mnist-{n_nodes}n", n_samples=n_samples, n_nodes=n_nodes
+    )
+
+
+def _conditions(w):
+    return [
+        ("gcp-direct", condition("gcp-direct", w)),
+        ("50/50", condition("fifty-fifty", w, cache_items=512)),
+    ]
+
+
+def _fingerprint(stats, store):
+    """Everything the equivalence claim compares, exactly (no rounding)."""
+    return (
+        aggregate_tier_hits(stats),
+        store.class_a_requests,
+        store.class_b_requests,
+        store.bytes_read,
+        [
+            (s.epoch, s.node, s.samples, s.data_wait_seconds,
+             s.compute_seconds, s.allreduce_wait_seconds, s.evictions)
+            for s in stats
+        ],
+    )
+
+
+def _timed_run(spec, engine: str, epochs: int = 1, repeats: int = 1):
+    """Best-of-``repeats`` wall-clock (the standard noise-robust estimator;
+    host jitter only ever inflates a measurement) + the result fingerprint."""
+    plane = dataclasses.replace(spec, engine=engine)
+    best = float("inf")
+    fp = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        stats, store = plane.build_sim().run(epochs=epochs)
+        best = min(best, time.perf_counter() - t0)
+        fp = _fingerprint(stats, store)
+    return best, fp
+
+
+def run(fast: bool = False) -> dict:
+    sweep = SWEEP_FAST if fast else SWEEP_FULL
+    big_nodes, big_samples = BIG_FAST if fast else BIG_FULL
+    floor = SPEEDUP_FLOOR_FAST if fast else SPEEDUP_FLOOR_FULL
+    rows, checks = [], []
+    all_exact = True
+    top_speedups = {}
+    for n_nodes in sweep:
+        w = _workload(n_nodes, PER_NODE_SAMPLES * n_nodes)
+        for tag, spec in _conditions(w):
+            t_scalar, fp_scalar = _timed_run(spec, "scalar", repeats=2)
+            t_vector, fp_vector = _timed_run(spec, "vector", repeats=3)
+            exact = fp_scalar == fp_vector
+            all_exact = all_exact and exact
+            speedup = t_scalar / t_vector if t_vector > 0 else float("inf")
+            if n_nodes == sweep[-1]:
+                top_speedups[tag] = speedup
+            rows.append(
+                [
+                    tag,
+                    f"{n_nodes}",
+                    f"{w.n_samples}",
+                    f"{t_scalar:.3f}s",
+                    f"{t_vector:.3f}s",
+                    f"{speedup:.1f}x",
+                    f"{1.0 / t_vector:.1f}" if t_vector > 0 else "inf",
+                    "==" if exact else "MISMATCH",
+                ]
+            )
+    checks.append(
+        check(
+            "fig13/scalar-vector-exact-at-every-point",
+            all_exact,
+            f"{len(rows)} sweep points compared field-for-field with == "
+            "(tier hits, Class A/B, bytes, per-node stat tuples)",
+        )
+    )
+    best = max(top_speedups.values()) if top_speedups else 0.0
+    checks.append(
+        check(
+            f"fig13/speedup>={floor:.0f}x-at-{sweep[-1]}-nodes",
+            best >= floor,
+            f"best condition at {sweep[-1]} nodes: {best:.1f}x "
+            + "("
+            + ", ".join(f"{t} {s:.1f}x" for t, s in top_speedups.items())
+            + f"; floor {floor:.0f}x{', fast sweep' if fast else ''})",
+        )
+    )
+    # -- the big epoch: the scale the scalar engine made impractical --------
+    w_big = _workload(big_nodes, big_samples)
+    big_spec = condition("fifty-fifty", w_big, cache_items=512)
+    t_big, _ = _timed_run(big_spec, "vector")
+    rows.append(
+        [
+            "50/50",
+            f"{big_nodes}",
+            f"{big_samples}",
+            "-",
+            f"{t_big:.2f}s",
+            "-",
+            f"{1.0 / t_big:.2f}",
+            "(vector only)",
+        ]
+    )
+    checks.append(
+        check(
+            f"fig13/{big_nodes}-node-{big_samples}-sample-epoch-in-seconds",
+            t_big <= 60.0,
+            f"one epoch, {big_nodes} nodes x {big_samples // big_nodes} "
+            f"samples/node, 50/50 prefetch: {t_big:.2f}s wall-clock "
+            "(vector engine)",
+        )
+    )
+    return {
+        "name": "Fig. 13 — simulator weak-scaling: vectorized segment engine "
+        "vs scalar event engine (beyond-paper)",
+        "engine": "vector",
+        "table": fmt_table(
+            [
+                "condition",
+                "nodes",
+                "samples",
+                "scalar",
+                "vector",
+                "speedup",
+                "epochs/sec (vec)",
+                "equivalence",
+            ],
+            rows,
+        ),
+        "rows": rows,
+        "checks": checks,
+        "notes": (
+            "Weak scaling: 2 000 samples per node, one modelled epoch per "
+            "point, both engines on the same spec; 'equivalence' is exact "
+            "== on tier hits, Class A/B, bytes and per-node (samples, "
+            "data-wait, compute, allreduce, evictions) tuples — the vector "
+            "engine shares the scalar engine's cost kernel and accumulates "
+            "with sequential cumsum scans, so floats agree bit-for-bit. "
+            "gcp-direct isolates the event-loop overhead (whole spans "
+            "vectorize); 50/50 keeps the real CappedCache in the loop "
+            "(exactness over speed) and still clears the big-epoch bar: "
+            "the final row models a 10^6-sample epoch across 100 nodes in "
+            "seconds under the vector engine."
+        ),
+    }

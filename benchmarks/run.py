@@ -25,6 +25,7 @@ MODULES = [
     "fig10_peer_cache",
     "fig11_stragglers",
     "fig12_oracle_gap",
+    "fig13_scaling",
     "table2_cost",
     "beyond_paper",
     "roofline_report",
@@ -52,6 +53,7 @@ def main(argv=None):
         summary[name] = {
             "name": res["name"],
             "seconds": round(dt, 1),
+            "engine": res.get("engine", "scalar"),
             "checks": [
                 {"label": l, "ok": o, "detail": d} for l, o, d in res["checks"]
             ],

@@ -29,6 +29,7 @@ from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.prefetcher import PrefetchService
 from repro.core.sampler import Sampler
 from repro.core.types import EpochStats
+from repro.engine.kernels import DemandKernel
 
 #: Internal marker yielded by ``_sample_steps`` for a sub-step phase (a
 #: time component that is its own scheduler event, not a finished sample).
@@ -165,6 +166,16 @@ class DeliLoader:
         order = list(self.sampler)
         skip = self._resume_cursor
         self._resume_cursor = 0
+        # The loader's share of the shared cost arithmetic
+        # (repro.engine.kernels): tier latencies come from the real stores
+        # sleeping their own clocks, so only the modelled loop overheads
+        # are mirrored here — through the same kernel fields every engine
+        # charges (bit-identical floats; see docs/PARITY.md).
+        loop_kernel = (
+            DemandKernel.loop_only(pipeline_model)
+            if pipeline_model is not None
+            else None
+        )
         if self.oracle_view is not None:
             self.oracle_view.begin_epoch(self._epoch, order)
         planner = (
@@ -199,10 +210,10 @@ class DeliLoader:
                     self.service.advance_to(self.clock.now())
                 t0 = self.clock.now()
                 result = self.dataset.get(idx)
-                if pipeline_model is not None:
+                if loop_kernel is not None:
                     if result.tier == "ram":
-                        self.clock.sleep(pipeline_model.ram_hit_s)
-                    self.clock.sleep(pipeline_model.cpu_overhead_s)
+                        self.clock.sleep(loop_kernel.ram_hit_s)
+                    self.clock.sleep(loop_kernel.cpu_overhead_s)
                 dt = self.clock.now() - t0
                 consumed += 1
                 stats.samples += 1

@@ -43,10 +43,11 @@ import dataclasses
 import heapq
 from typing import TYPE_CHECKING, Callable, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.bandwidth import BucketModel, NetworkModel, PipelineCostModel
+from repro.core.bandwidth import BucketModel, NetworkModel
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock
 from repro.core.types import EpochStats, StoreStats
+from repro.engine.kernels import DemandKernel
 
 if TYPE_CHECKING:  # deferred for the same reason as in core.simulator:
     # repro.distributed imports repro.core back.
@@ -184,9 +185,11 @@ class SubstepAccess:
       4. arrival: miss-insert (when the demand path owns population), CPU
          overhead, per-sample accounting.
 
-    Both projections construct this object around the same scaled models
-    and run the same generator — identical charge/record/yield order —
-    which is what keeps sub-step specs inside the exact-parity domain.
+    Both projections construct this object around the same cost kernel
+    (``repro.engine.kernels.DemandKernel``, precomputed from the same
+    scaled models) and run the same generator — identical
+    charge/record/yield order — which is what keeps sub-step specs inside
+    the exact-parity domain.
     The component *sums* differ from the step schedule only on the peer-hit
     path (RTT and streaming are charged as two adds instead of one), so
     sub-step results are a different — more faithful — schedule, compared
@@ -200,10 +203,7 @@ class SubstepAccess:
     peer_lookup: Optional[Callable[[int], Optional[bytes]]]  # None = no tier
     bucket_read: Callable[[int], bytes]  # bills the Class B GET at issue
     insert: Callable[[int, bytes], None]  # demand-path cache insert
-    bucket: BucketModel  # this node's (profile-scaled) models
-    network: NetworkModel
-    pipeline: PipelineCostModel
-    sample_bytes: int
+    kernel: "DemandKernel"  # precomputed per-sample charge components
     insert_on_miss: bool
 
     def run(self, idx: int, stats: EpochStats) -> Iterator[int]:
@@ -211,26 +211,26 @@ class SubstepAccess:
         self.fold_own()
         payload = self.local_lookup(idx)
         if payload is not None:
-            self.charge(self.pipeline.ram_hit_s)
+            self.charge(self.kernel.ram_hit_s)
             stats.record("ram")
         else:
             if self.peer_lookup is not None:
-                self.charge(self.network.lookup_seconds())  # probe in flight
+                self.charge(self.kernel.probe_rtt_s)  # probe in flight
                 yield STEP_CONTINUE
                 self.fold_own()
                 payload = self.peer_lookup(idx)
             if payload is not None:
-                self.charge(self.network.stream_seconds(self.sample_bytes))
+                self.charge(self.kernel.peer_stream_s)
                 stats.record("peer")
             else:
                 payload = self.bucket_read(idx)
-                self.charge(self.bucket.get_seconds(self.sample_bytes))
+                self.charge(self.kernel.bucket_get_s)
                 stats.record("bucket")
             yield STEP_CONTINUE  # transfer in flight; rounds land inside it
             self.fold_own()
             if self.insert_on_miss:
                 self.insert(idx, payload)
-        self.charge(self.pipeline.cpu_overhead_s)
+        self.charge(self.kernel.cpu_overhead_s)
         stats.samples += 1
         stats.data_wait_seconds += self.now() - t0
 

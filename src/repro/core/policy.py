@@ -77,26 +77,39 @@ class PrefetchPlanner:
         self.config = config
         self.rounds_issued = 0
 
-    def __iter__(self) -> Iterator[Tuple[int, Optional[List[int]]]]:
+    def announce_schedule(self) -> List[Tuple[int, List[int]]]:
+        """The epoch's fetch rounds as ``(consume_position, round)`` pairs,
+        ascending in position: the round is announced immediately *before*
+        the access at that position.  Purely positional — the knob-driven
+        policy never inspects cache state — so the vector engine can
+        precompute it and batch the demand reads between announce points
+        (``repro.engine.vector``).  ``__iter__`` delegates here, keeping
+        this the ONE statement of announce timing."""
         cfg = self.config
         n = len(self.order)
+        schedule: List[Tuple[int, List[int]]] = []
         if not cfg.enabled:
-            for idx in self.order:
-                yield idx, None
-            return
+            return schedule
         announced = 0  # prefix of `order` announced to the service
         consumed = 0
         while consumed < n:
-            round_: Optional[List[int]] = None
             pending = announced - consumed
             # Announce the next round when at/below the threshold (threshold
             # 0 => only when the queue is fully depleted).
             if pending <= cfg.prefetch_threshold and announced < n:
                 round_ = self.order[announced : announced + cfg.fetch_size]
                 announced += len(round_)
-                self.rounds_issued += 1
-            yield self.order[consumed], round_
+                schedule.append((consumed, round_))
             consumed += 1
+        return schedule
+
+    def __iter__(self) -> Iterator[Tuple[int, Optional[List[int]]]]:
+        rounds = {pos: round_ for pos, round_ in self.announce_schedule()}
+        for consumed, idx in enumerate(self.order):
+            round_ = rounds.get(consumed)
+            if round_ is not None:
+                self.rounds_issued += 1
+            yield idx, round_
 
     def fetch_rounds(self) -> List[List[int]]:
         """All rounds, ignoring consumption interleaving (for cost model)."""

@@ -73,6 +73,7 @@ from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
+from repro.engine.kernels import DemandKernel
 
 if TYPE_CHECKING:  # runtime import is deferred: repro.core is imported by
     # repro.distributed.peer_cache, so a module-level import here would be
@@ -116,12 +117,23 @@ class SimConfig:
     # bucket source; both stay exactly parity-checked.
     eviction: str = "fifo"  # "fifo" | "belady"
     prefetch_policy: str = "paper"  # "paper" | "oracle"
+    # Execution engine (ISSUE 6): "scalar" = the historical one-event-per-
+    # sample Python stepper; "vector" = repro.engine.vector's segment
+    # batcher, which advances runs of demand reads between cross-node
+    # interaction points as numpy array ops.  Results are exactly equal
+    # (``==``, docs/PARITY.md); the vector engine applies under the
+    # interleaved cluster schedule and falls back to scalar stepping for
+    # epochs whose exactness it cannot batch (peer registry attached, or
+    # the legacy sequential schedule).
+    engine: str = "scalar"  # "scalar" | "vector"
 
     def __post_init__(self) -> None:
         if self.sync not in ("epoch", "batch"):
             raise ValueError(f"unknown sync {self.sync!r}")
         if self.granularity not in ("step", "substep"):
             raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.engine not in ("scalar", "vector"):
+            raise ValueError(f"unknown engine {self.engine!r}")
         if self.eviction not in ("fifo", "belady"):
             raise ValueError(f"unknown eviction {self.eviction!r}")
         if self.prefetch_policy not in ("paper", "oracle"):
@@ -205,6 +217,17 @@ class NodeSimulator:
         self.pipeline = profile.scale_pipeline(pipeline)
         self.network = profile.scale_network(network)
         self.compute_per_batch_s = profile.batch_compute_s(spec.compute_per_batch_s)
+        # THE per-sample cost arithmetic (repro.engine.kernels), shared by
+        # this scalar stepper, the sub-step machine, the vector engine and
+        # DeliLoader's runtime mirror.  Precomputed from the *scaled*
+        # models, so straggler profiles are baked in.
+        self.kernel = DemandKernel.from_models(
+            bucket=self.bucket,
+            disk=self.disk,
+            network=self.network,
+            pipeline=self.pipeline,
+            sample_bytes=spec.sample_bytes,
+        )
         self.node_id = node_id
         self.t = 0.0
         # Oracle data plane (ISSUE 5): the clairvoyant planner replaces the
@@ -252,6 +275,7 @@ class NodeSimulator:
         self.registry: Optional["PeerCacheRegistry"] = None
         # Epoch-in-progress state (stepper API).
         self._stats: Optional[EpochStats] = None
+        self._planner = None  # the epoch's planner object (engines introspect it)
         self._planner_iter = None
         self._events: Optional[Iterator[int]] = None
         self._samples_in_batch = 0
@@ -267,8 +291,7 @@ class NodeSimulator:
 
     def _bucket_read(self, idx: int) -> bytes:
         """Bill one demand Class B GET (payloads are sentinels here)."""
-        self.store_stats.class_b_requests += 1
-        self.store_stats.bytes_read += self.spec.sample_bytes
+        self.kernel.bill_demand_gets(self.store_stats)
         return _SENTINEL
 
     def _build_substep(self) -> Optional[SubstepAccess]:
@@ -295,10 +318,7 @@ class NodeSimulator:
             peer_lookup=peer_lookup,
             bucket_read=self._bucket_read,
             insert=self.cache.put,
-            bucket=self.bucket,
-            network=self.network,
-            pipeline=self.pipeline,
-            sample_bytes=self.spec.sample_bytes,
+            kernel=self.kernel,
             insert_on_miss=self._insert_on_miss,
         )
 
@@ -351,49 +371,50 @@ class NodeSimulator:
             self.service.advance_to(t)
 
     # -- sample access -------------------------------------------------------
-    def _access(self, idx: int, stats: EpochStats) -> None:
-        """One sample read: advance ``t`` through the same component
-        sequence the lock-step runtime sleeps (tier latency, then modelled
-        loop overheads), so both timelines are float-identical."""
-        t0 = self.t
+    def _classify(self, idx: int) -> Tuple[str, bool]:
+        """Resolve one demand read to its serving tier — the only stateful
+        part of an access.  Returns ``(tier, probed)``; ``probed`` marks a
+        bucket fallback that paid a failed peer-probe RTT first.  Folds
+        this node's completed prefetch rounds before the lookup (barrier),
+        and performs the cache/peer lookups whose side effects (CacheStats,
+        Belady next_use queries, registry hit counters) are part of the
+        modelled state evolution."""
         if self.cfg.source == "disk":
             # Disk-source baseline: no cache tier at all; every read is a
             # local-disk access — a distinct source tier, never a local
             # *cache* hit (misses stay derived as samples - local hits).
-            self.t += self.disk.get_seconds(self.spec.sample_bytes)
-            stats.record("disk-source")
-        elif self.cache is None:
+            return "disk-source", False
+        if self.cache is None:
             # Direct-from-bucket baseline: sequential fallback GET.
-            self.t += self._sequential_get_s()
-            stats.record("bucket")
-            self.store_stats.class_b_requests += 1
-            self.store_stats.bytes_read += self.spec.sample_bytes
-        else:
-            assert self.service is not None
-            self.service.advance_to(self.t)  # fold completed rounds (barrier)
-            if self.cache.get(idx) is not None:
-                # Sim caches are RAM-only (sentinel payloads, no spill).
-                self.t += self.pipeline.ram_hit_s
-                stats.record("ram")
-            elif self._peer_fetch(idx):
-                # Local miss served by a peer's cache over the inter-node
-                # network: RTT + streaming, no Class B request.
-                self.t += self.network.transfer_seconds(self.spec.sample_bytes)
-                stats.record("peer")
-                if self._insert_on_miss:
-                    self.cache.put(idx, _SENTINEL)
-            else:
-                if self.registry is not None:
-                    self.t += self.network.lookup_seconds()  # failed peer probe
-                self.t += self._sequential_get_s()
-                stats.record("bucket")
-                self.store_stats.class_b_requests += 1
-                self.store_stats.bytes_read += self.spec.sample_bytes
-                if self._insert_on_miss:
-                    # Cache-only mode inserts on miss (paper §IV-B); with a
-                    # pre-fetch service the worker does not (§IV-C).
-                    self.cache.put(idx, _SENTINEL)
-        self.t += self.pipeline.cpu_overhead_s
+            return "bucket", False
+        assert self.service is not None
+        self.service.advance_to(self.t)  # fold completed rounds (barrier)
+        if self.cache.get(idx) is not None:
+            # Sim caches are RAM-only (sentinel payloads, no spill).
+            return "ram", False
+        if self._peer_fetch(idx):
+            # Local miss served by a peer's cache over the inter-node
+            # network: RTT + streaming, no Class B request.
+            return "peer", False
+        return "bucket", self.registry is not None  # failed probe RTT if probed
+
+    def _access(self, idx: int, stats: EpochStats) -> None:
+        """One sample read: classify the serving tier, then advance ``t``
+        through the tier's kernel charge components — the same floats, in
+        the same order, every engine and the lock-step runtime use (see
+        ``repro.engine.kernels``) — then the modelled loop overheads."""
+        t0 = self.t
+        tier, probed = self._classify(idx)
+        for component_s in self.kernel.tier_charges(tier, probed):
+            self.t += component_s
+        stats.record(tier)
+        if tier == "bucket":
+            self.kernel.bill_demand_gets(self.store_stats)
+        if tier in ("peer", "bucket") and self.cache is not None and self._insert_on_miss:
+            # Cache-only mode inserts on miss (paper §IV-B); with a
+            # pre-fetch service the worker does not (§IV-C).
+            self.cache.put(idx, _SENTINEL)
+        self.t += self.kernel.cpu_overhead_s
         stats.samples += 1
         stats.data_wait_seconds += self.t - t0
 
@@ -420,17 +441,16 @@ class NodeSimulator:
             assert self.cache is not None  # SimConfig validation
             # THE shared planner construction (repro.oracle.planner) — the
             # lock-step runtime builds its planner through the same call.
-            self._planner_iter = iter(
-                planner_for(
-                    order,
-                    policy="oracle",
-                    config=None,
-                    capacity=self.cfg.cache_items,
-                    resident=self.cache.contains,
-                )
+            self._planner = planner_for(
+                order,
+                policy="oracle",
+                config=None,
+                capacity=self.cfg.cache_items,
+                resident=self.cache.contains,
             )
         else:
-            self._planner_iter = iter(PrefetchPlanner(order, pf))
+            self._planner = PrefetchPlanner(order, pf)
+        self._planner_iter = iter(self._planner)
         self._samples_in_batch = 0
         self._events = self._epoch_events(self._build_substep())
 
@@ -491,6 +511,7 @@ class NodeSimulator:
         if self.cache:
             stats.evictions = self.cache.stats.evictions - self._evictions_before
         self._stats = None
+        self._planner = None
         self._planner_iter = None
         self._events = None
         return stats
@@ -583,8 +604,20 @@ def simulate_cluster(
     profiles = list(profiles)
     if len(profiles) != spec.n_nodes:
         raise ValueError(f"need {spec.n_nodes} profiles, got {len(profiles)}")
+    node_cls = NodeSimulator
+    if cfg.engine == "vector" and interleaved:
+        # The vectorized segment engine (ISSUE 6).  Lazy import: the engine
+        # subclasses NodeSimulator, so a module-level import would be
+        # circular.  Only the interleaved schedule is batchable — the
+        # legacy sequential schedule folds prefetch completions in a
+        # different order for the clairvoyant data plane, so it keeps
+        # scalar stepping (silent per-node fallback; documented on
+        # SimConfig.engine).
+        from repro.engine.vector import VectorNodeEngine
+
+        node_cls = VectorNodeEngine
     nodes = [
-        NodeSimulator(
+        node_cls(
             spec,
             cfg,
             bucket,

@@ -1,0 +1,33 @@
+"""Execution engines for the data-plane simulator.
+
+``repro.engine.kernels`` holds the engine-agnostic per-sample cost
+arithmetic (:class:`DemandKernel`) shared by every consumer — the scalar
+event engine in ``repro.core.simulator``, the sub-step machine in
+``repro.core.lockstep``, ``DeliLoader``'s runtime mirror, and the vector
+engine here.
+
+``repro.engine.vector`` is the batched engine: it advances each node's
+between-interaction *segment* (the run of demand reads between prefetch
+round completions and batch/epoch barriers) as numpy array ops, leaving
+the event heap in ``lockstep.drive_interleaved_epoch`` as the sole
+arbiter of cross-node ordering.  Selected via ``SimConfig(engine=
+"vector")`` / ``DataPlaneSpec(engine="vector")``; equivalence with the
+scalar engine is exact ``==`` (docs/PARITY.md).
+
+``VectorNodeEngine`` is exposed lazily: ``repro.engine.vector`` imports
+``repro.core.simulator``, while core modules import ``repro.engine.
+kernels`` — the lazy hop keeps that acyclic.
+"""
+from __future__ import annotations
+
+from repro.engine.kernels import DemandKernel
+
+__all__ = ["DemandKernel", "VectorNodeEngine"]
+
+
+def __getattr__(name: str):
+    if name == "VectorNodeEngine":
+        from repro.engine.vector import VectorNodeEngine
+
+        return VectorNodeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,326 @@
+"""The vectorized segment engine (ISSUE 6 tentpole).
+
+``VectorNodeEngine`` is a drop-in ``NodeSimulator`` whose epoch stepper
+advances *between-interaction segments* — runs of demand reads between
+prefetch-round completions, announce points, and batch/epoch barriers — as
+batched numpy array ops, while ``lockstep.drive_interleaved_epoch``'s
+event heap remains the sole arbiter of cross-node ordering.  Selected by
+``SimConfig(engine="vector")`` under the interleaved schedule
+(``simulate_cluster`` keeps scalar stepping otherwise).
+
+Exactness (``==``, never tolerances — docs/PARITY.md) rests on three
+pillars:
+
+**Same floats.**  Per-sample charge components come from the shared
+:class:`repro.engine.kernels.DemandKernel` — the identical precomputed
+floats the scalar engine adds one at a time.
+
+**Same accumulation order.**  Every float chain is built with
+``np.cumsum``, whose float64 kernel is a strictly *sequential*
+left-to-right scan — the same rounding as the scalar ``t += c`` chain.
+(``np.sum`` would be pairwise and is never used on floats here.)  A
+segment's charge chain lays out exactly the scalar event sequence — tier
+charge, CPU overhead, per-sample, with the batch compute interleaved at
+gradient boundaries — and running accumulators (data-wait, compute
+seconds) are extended by prepending the carried value:
+``np.cumsum(np.concatenate(([carry], deltas)))[-1]``.
+
+**Same interaction points.**  A segment never spans a point where the
+scalar engine's *state* could change: prefetch completions are folded at
+segment boundaries only, and a segment that would straddle a pending
+round's completion time is truncated at the first access whose start is
+at/past it (the scalar engine folds before every access, so an access
+starting before the completion provably cannot observe it).  Announce
+points come from the planners' positional ``announce_schedule()``; the
+oracle's residency filter — the one lazily-evaluated piece — is applied
+at exactly the announce position, against the same cache state.  Cache
+*state* itself always lives in the real ``CappedCache``: modes where the
+demand path mutates it walk a per-sample loop over real ``get``/``put``
+(membership, FIFO/Belady eviction order and ``CacheStats`` evolve
+bit-identically); modes where only the prefetch service populates it read
+a residency bitmask maintained by the cache's residency listener.
+
+Epochs with a peer-cache registry fall back to inherited scalar stepping:
+peer probes are per-sample cross-node interactions — there is no segment
+to batch — and the registry also owns the residency-listener slot.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lockstep import (
+    SENTINEL,
+    STEP_BATCH_END,
+    STEP_CONTINUE,
+)
+from repro.core.simulator import NodeSimulator
+
+
+def _extend(carry: float, deltas: np.ndarray) -> float:
+    """Fold ``deltas`` into a running scalar accumulator in strict
+    left-to-right order — bit-identical to the scalar engine's repeated
+    ``acc += d``."""
+    return float(np.cumsum(np.concatenate(([carry], deltas)))[-1])
+
+
+class VectorNodeEngine(NodeSimulator):
+    """``NodeSimulator`` with segment-batched epoch stepping.
+
+    Everything but the stepper is inherited: construction, the shared
+    ``DemandKernel``, ``LockstepPrefetchService``, planner construction,
+    ``sync_to``/``finish_epoch``/``fold_inserts_until``.  ``begin_epoch``
+    swaps the scalar event generator for :meth:`_vector_events` when the
+    epoch is batchable (no peer registry)."""
+
+    def begin_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> None:
+        super().begin_epoch(epoch, order, node=node)
+        if self.registry is None:
+            # The scalar generator installed by super() is lazy and
+            # side-effect-free until first resumed — safe to discard.
+            self._events = self._vector_events(list(order))
+
+    # -- segment arithmetic --------------------------------------------------
+    def _span_chain(
+        self, pos: int, tier_charges: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The virtual-time chain of a candidate span of ``m`` consecutive
+        accesses starting at epoch position ``pos``: per sample its tier
+        charge then the CPU overhead, with the per-batch compute charge
+        interleaved at every gradient boundary — the exact scalar event
+        sequence, accumulated by one sequential ``cumsum`` from ``self.t``.
+
+        Returns ``(chain, slots)``: ``chain`` has length ``L+1`` with
+        ``chain[0] == self.t``; sample ``j`` starts at ``chain[slots[j]]``
+        and its access ends (post-CPU, pre-compute) at
+        ``chain[slots[j] + 2]``."""
+        m = len(tier_charges)
+        batch = self.spec.batch_size
+        off = np.arange(m)
+        # Gradient boundaries completed before each sample / in the span:
+        # position q ends a batch when (q+1) % batch == 0.
+        be_before = (pos + off) // batch - pos // batch
+        slots = 2 * off + be_before
+        total_be = (pos + m) // batch - pos // batch
+        charges = np.full(2 * m + total_be, self.compute_per_batch_s)
+        charges[slots] = tier_charges
+        charges[slots + 1] = self.kernel.cpu_overhead_s
+        chain = np.cumsum(np.concatenate(([self.t], charges)))
+        return chain, slots
+
+    def _commit_span(
+        self, pos: int, chain: np.ndarray, slots: np.ndarray, m_c: int
+    ) -> int:
+        """Advance the clock and per-epoch accumulators past the first
+        ``m_c`` samples of the span; returns the new epoch position."""
+        stats = self._stats
+        assert stats is not None
+        starts = chain[slots[:m_c]]
+        ends = chain[slots[:m_c] + 2]
+        # Per-sample data-wait is end - start: the same single subtraction
+        # of the same two floats the scalar engine performs.
+        stats.data_wait_seconds = _extend(stats.data_wait_seconds, ends - starts)
+        stats.samples += m_c
+        batch = self.spec.batch_size
+        n_be = (pos + m_c) // batch - pos // batch
+        if n_be:
+            stats.compute_seconds = _extend(
+                stats.compute_seconds, np.full(n_be, self.compute_per_batch_s)
+            )
+        if m_c == len(slots):
+            self.t = float(chain[-1])  # includes a trailing batch compute
+        else:
+            self.t = float(chain[slots[m_c]])  # start of the first uncommitted
+        self._samples_in_batch = (pos + m_c) % batch
+        return pos + m_c
+
+    def _span_cut(self, pos: int, n: int) -> int:
+        """A span's hard end: the next gradient boundary under the
+        per-batch allreduce schedule (the engine must yield
+        ``STEP_BATCH_END`` there so the driver can park this node), the
+        epoch end otherwise."""
+        if self.cfg.sync == "batch":
+            batch = self.spec.batch_size
+            return min(n, (pos // batch + 1) * batch)
+        return n
+
+    def _boundary_signal(self, pos: int, n: int) -> Iterator[int]:
+        """Yield the scalar stepper's signal for a commit that ended at
+        ``pos``: ``STEP_BATCH_END`` exactly when the last committed event
+        completed a gradient batch.  (Intermediate non-boundary commits
+        yield nothing — the heap only arbitrates cross-node interactions,
+        and a batchable epoch has none between boundaries.)"""
+        if self._samples_in_batch == 0:
+            yield STEP_BATCH_END
+        elif pos == n:
+            yield STEP_CONTINUE  # final partial batch: scalar's last signal
+
+    # -- the stepper ---------------------------------------------------------
+    def _vector_events(self, order: List[int]) -> Iterator[int]:
+        stats = self._stats
+        assert stats is not None
+        if not order:
+            return
+        if self.cfg.source == "disk":
+            yield from self._constant_tier_events(
+                order, "disk-source", self.kernel.disk_get_s
+            )
+        elif self.cache is None:
+            yield from self._constant_tier_events(
+                order, "bucket", self.kernel.bucket_get_s
+            )
+        elif self._insert_on_miss:
+            yield from self._cache_demand_events(order)
+        else:
+            yield from self._prefetch_events(order)
+
+    def _constant_tier_events(
+        self, order: List[int], tier: str, charge_s: float
+    ) -> Iterator[int]:
+        """Disk-source / direct-from-bucket baselines: every access is
+        served by one tier at one constant charge; no cache state exists,
+        so whole inter-barrier spans vectorize unconditionally."""
+        stats = self._stats
+        assert stats is not None
+        n = len(order)
+        pos = 0
+        while pos < n:
+            end = self._span_cut(pos, n)
+            m = end - pos
+            chain, slots = self._span_chain(pos, np.full(m, charge_s))
+            stats.record(tier, m)
+            if tier == "bucket":
+                self.kernel.bill_demand_gets(self.store_stats, m)
+            pos = self._commit_span(pos, chain, slots, m)
+            yield from self._boundary_signal(pos, n)
+
+    def _cache_demand_events(self, order: List[int]) -> Iterator[int]:
+        """Demand-populated cache (no active prefetch service, FIFO or
+        Belady eviction): membership evolves on every access, so tier
+        decisions walk a tight per-sample loop over the REAL cache —
+        ``get``/``put`` evolve membership, eviction order, the clairvoyant
+        cursor and ``CacheStats`` bit-identically to the scalar engine —
+        and all *float* arithmetic batches over the resulting hit mask."""
+        stats = self._stats
+        assert stats is not None
+        cache = self.cache
+        assert cache is not None
+        view = self.oracle_view
+        get, put = cache.get, cache.put
+        n = len(order)
+        pos = 0
+        while pos < n:
+            end = self._span_cut(pos, n)
+            seg = order[pos:end]
+            hits = np.empty(len(seg), dtype=bool)
+            for j, idx in enumerate(seg):
+                if view is not None:
+                    # Cursor advances at access start (the scalar engine's
+                    # mirrored line): a just-consumed key competes for
+                    # cache space on its NEXT occurrence.
+                    view.on_consume(idx)
+                hit = get(idx) is not None
+                if not hit:
+                    put(idx, SENTINEL)  # paper §IV-B: worker inserts on miss
+                hits[j] = hit
+            n_ram = int(np.count_nonzero(hits))
+            n_bucket = len(seg) - n_ram
+            if n_ram:
+                stats.record("ram", n_ram)
+            if n_bucket:
+                stats.record("bucket", n_bucket)
+                self.kernel.bill_demand_gets(self.store_stats, n_bucket)
+            chain, slots = self._span_chain(
+                pos,
+                np.where(hits, self.kernel.ram_hit_s, self.kernel.bucket_get_s),
+            )
+            pos = self._commit_span(pos, chain, slots, len(seg))
+            yield from self._boundary_signal(pos, n)
+
+    def _prefetch_events(self, order: List[int]) -> Iterator[int]:
+        """Prefetch-populated cache (paper or oracle planner;
+        ``insert_on_miss`` is off): demand reads never mutate the cache,
+        so within a segment residency is frozen — a numpy bitmask, kept
+        current by the cache's residency listener (free here: the listener
+        slot is only otherwise used by the peer registry, which forces the
+        scalar fallback).  Segments end at announce points, gradient
+        boundaries (``sync="batch"``), and epoch end — and are truncated
+        at the first access starting at/past the earliest pending round
+        completion, the point where the scalar engine's fold-before-access
+        could first change an outcome."""
+        stats = self._stats
+        assert stats is not None
+        cache, service, planner = self.cache, self.service, self._planner
+        assert cache is not None and service is not None and planner is not None
+        view = self.oracle_view
+        n = len(order)
+        # Positional announce points (both planners); only the oracle's
+        # residency filter is stateful, applied below at each point.
+        schedule = planner.announce_schedule()
+        filter_chunk = getattr(planner, "filter_chunk", None)
+        si = 0
+        mask = np.zeros(self.spec.n_samples, dtype=bool)
+        mask[cache.keys()] = True
+
+        def on_insert(i: int) -> None:
+            mask[i] = True
+
+        def on_evict(i: int) -> None:
+            mask[i] = False
+
+        cache.set_residency_listener(on_insert, on_evict)
+        order_arr = np.asarray(order, dtype=np.int64)
+        try:
+            pos = 0
+            while pos < n:
+                # Boundary: fold completions <= now (the driver's fold_all
+                # plus the access-start fold, both at cursor == pos), then
+                # announce any round due at this position — filter (oracle)
+                # and issue exactly as the scalar planner/stepper would.
+                service.advance_to(self.t)
+                while si < len(schedule) and schedule[si][0] == pos:
+                    chunk = schedule[si][1]
+                    si += 1
+                    kept = list(chunk) if filter_chunk is None else filter_chunk(chunk)
+                    if kept:
+                        planner.rounds_issued += 1
+                        service.issue(kept, now=self.t, stats=stats)
+                end = self._span_cut(pos, n)
+                if si < len(schedule):
+                    end = min(end, schedule[si][0])
+                hits = mask[order_arr[pos:end]]
+                chain, slots = self._span_chain(
+                    pos,
+                    np.where(hits, self.kernel.ram_hit_s, self.kernel.bucket_get_s),
+                )
+                m_c = end - pos
+                if service.pending:
+                    # Truncate at the first access whose start is at/past
+                    # the earliest pending completion: the scalar engine
+                    # folds before every access, so that access (and none
+                    # earlier) could observe the round.
+                    next_done = min(done for done, _ in service.pending)
+                    m_c = int(
+                        np.searchsorted(chain[slots], next_done, side="left")
+                    )
+                    if m_c == 0:
+                        continue  # a round completed exactly now: fold first
+                    m_c = min(m_c, end - pos)
+                committed = hits[:m_c]
+                n_ram = int(np.count_nonzero(committed))
+                n_bucket = m_c - n_ram
+                if view is not None:
+                    view.on_consume_many(m_c)
+                if n_ram:
+                    stats.record("ram", n_ram)
+                    cache.stats.hits += n_ram  # mirror of per-access get()
+                    cache.stats.ram_hits += n_ram
+                if n_bucket:
+                    stats.record("bucket", n_bucket)
+                    cache.stats.misses += n_bucket
+                    self.kernel.bill_demand_gets(self.store_stats, n_bucket)
+                pos = self._commit_span(pos, chain, slots, m_c)
+                yield from self._boundary_signal(pos, n)
+        finally:
+            cache.set_residency_listener(None, None)

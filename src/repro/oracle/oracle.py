@@ -108,6 +108,12 @@ class NodeAccessView:
         consumption follows the installed order by construction)."""
         self._cursor += 1
 
+    def on_consume_many(self, n: int) -> None:
+        """Advance the cursor past ``n`` consumed samples at once — the
+        vector engine's segment commit.  Equivalent to ``n`` calls to
+        :meth:`on_consume`: the cursor is the only state either touches."""
+        self._cursor += n
+
     def next_use(self, idx: int) -> float:
         """Next future position of ``idx`` (>= cursor), or :data:`NEVER`."""
         positions = self._positions.get(idx)

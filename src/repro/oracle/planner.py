@@ -82,15 +82,24 @@ class OraclePrefetchPlanner:
         #: locally (the re-fetches the heuristic planner would have paid).
         self.resident_skips = 0
 
-    def __iter__(self) -> Iterator[Tuple[int, Optional[List[int]]]]:
+    def announce_schedule(self) -> List[Tuple[int, List[int]]]:
+        """The epoch's *unfiltered* announce points as ``(consume_position,
+        chunk)`` pairs, ascending in position.  The window/ramp arithmetic
+        is purely positional — ``pending`` counts every announced key,
+        resident or not, so skipped keys still hold their window slot and
+        the schedule is precomputable.  Only the residency filter is
+        stateful: it must be evaluated *at the announce point*, against the
+        cache as it stands then — ``__iter__`` does so here, and the vector
+        engine does so at each segment boundary (``repro.engine.vector``),
+        the same cache state at the same position either way."""
         n = len(self.order)
         window = _window(self.capacity, n)
         refill_at = window // 2  # announce when pending drops to half-window
+        schedule: List[Tuple[int, List[int]]] = []
         announced = 0
         consumed = 0
         size = 1  # ramp: 1, 2, 4, ... — early deadlines never stall
         while consumed < n:
-            round_: Optional[List[int]] = None
             pending = announced - consumed
             if announced < n and pending <= refill_at:
                 take = min(size, window - pending, n - announced)
@@ -98,15 +107,30 @@ class OraclePrefetchPlanner:
                 announced += len(chunk)
                 if size < window:
                     size = min(size * 2, window)
-                if self.resident is not None:
-                    kept = [k for k in chunk if not self.resident(k)]
-                    self.resident_skips += len(chunk) - len(kept)
-                    chunk = kept
+                schedule.append((consumed, chunk))
+            consumed += 1
+        return schedule
+
+    def filter_chunk(self, chunk: List[int]) -> List[int]:
+        """Apply the residency filter to one announced chunk (call exactly
+        once per chunk, at its announce point — updates the skip counter)."""
+        if self.resident is None:
+            return list(chunk)
+        kept = [k for k in chunk if not self.resident(k)]
+        self.resident_skips += len(chunk) - len(kept)
+        return kept
+
+    def __iter__(self) -> Iterator[Tuple[int, Optional[List[int]]]]:
+        rounds = {pos: chunk for pos, chunk in self.announce_schedule()}
+        for consumed, idx in enumerate(self.order):
+            round_: Optional[List[int]] = None
+            chunk = rounds.get(consumed)
+            if chunk is not None:
+                chunk = self.filter_chunk(chunk)
                 if chunk:
                     round_ = chunk
                     self.rounds_issued += 1
-            yield self.order[consumed], round_
-            consumed += 1
+            yield idx, round_
 
 
 def planner_for(

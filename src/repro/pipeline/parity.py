@@ -31,6 +31,18 @@ driver lines, ``BeladyEviction`` is a pure function of cache state +
 same ``repro.oracle.planner.planner_for`` call — composed with every
 schedule knob above (batch sync, sub-step events, stragglers).
 
+Since ISSUE 6 the same discipline covers the simulator's two *execution
+engines*: ``engine="vector"`` (``repro.engine.vector``) batches each
+node's between-interaction segment into numpy array ops yet agrees with
+the scalar stepper bit-for-bit — one cost kernel
+(``repro.engine.kernels.DemandKernel``), sequential ``np.cumsum``
+accumulation (the same rounding as repeated ``t += x``), segments cut at
+exactly the points where scalar state can change.  The parity runs here
+always compare the simulator against the lock-step runtime at whatever
+engine the spec declares (the runtime builds loaders, not engines);
+scalar-vs-vector equivalence itself is enforced by
+``tests/test_engine_equivalence.py`` with the same ``==``-only policy.
+
 ``assert_parity`` checks exactly that, driving ``build_runtime()`` in its
 default lock-step mode.  Since the lock-step scheduler landed, specs with
 **prefetching enabled are in scope**: service completions are virtual-time

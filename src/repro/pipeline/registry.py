@@ -11,6 +11,13 @@ fifty-fifty / full-fetch) and the beyond-paper tiers (cache+peer,
 cache+peer+repl, locality).  Third parties extend via
 ``@register_condition("my-condition")``.
 
+Every factory passes ``**overrides`` through to ``DataPlaneSpec``, so
+cross-cutting spec knobs ride along with any named condition — e.g.
+``engine="vector"`` (ISSUE 6) selects the vectorized segment engine for
+the simulator projection with bit-identical results, and the ISSUE 4
+schedule knobs (``sync``, ``granularity``, ``nodes``) compose the same
+way.
+
 Samplers are registered the same way so ``DataPlaneSpec.sampler`` stays a
 plain string:
 

@@ -70,6 +70,7 @@ from repro.core.store import (
 from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
+from repro.engine.kernels import DemandKernel
 from repro.oracle import AccessOracle, BeladyEviction, make_planner_factory
 from repro.pipeline.tiers import DiskSourceTier
 
@@ -158,6 +159,13 @@ class DataPlaneSpec:
     nodes: Optional[Tuple[NodeProfile, ...]] = None  # per-rank straggler profiles
     eviction: str = "fifo"  # "fifo" | "belady" (clairvoyant, ISSUE 5)
     prefetch_policy: str = "paper"  # "paper" | "oracle" (clairvoyant, ISSUE 5)
+    # Execution engine (ISSUE 6): "scalar" = one-event-per-sample stepping;
+    # "vector" = repro.engine.vector's segment batcher (numpy array ops
+    # between cross-node interaction points; exact ``==`` results).
+    # Validated ONCE in SimConfig.__post_init__ (rides the to_sim_config()
+    # call below); the free-running threaded runtime rejects "vector"
+    # loudly in RuntimeCluster.__init__.
+    engine: str = "scalar"  # "scalar" | "vector"
     seed: int = 0
     # Calibrated models (Table I defaults; override for fast-forwarded runs).
     bucket: BucketModel = DEFAULT_BUCKET
@@ -239,6 +247,7 @@ class DataPlaneSpec:
             granularity=self.granularity,
             eviction=self.eviction,
             prefetch_policy=self.prefetch_policy,
+            engine=self.engine,
         )
 
     @classmethod
@@ -261,6 +270,7 @@ class DataPlaneSpec:
             granularity=cfg.granularity,
             eviction=cfg.eviction,
             prefetch_policy=cfg.prefetch_policy,
+            engine=cfg.engine,
             seed=seed,
             **overrides,
         )
@@ -385,6 +395,17 @@ class RuntimeCluster:
             raise ValueError(
                 "eviction='belady' / prefetch_policy='oracle' need the "
                 "lock-step runtime (build_runtime() with no clock)"
+            )
+        if not self.lockstep and spec.engine == "vector":
+            # Same loud-restriction policy (ISSUE 6): the vector engine
+            # batches virtual-time segments; a free-running threaded
+            # cluster has no virtual segments to batch, and silently
+            # running scalar would misreport which engine produced the
+            # numbers.
+            raise ValueError(
+                "engine='vector' is a simulator/lock-step engine; the "
+                "free-running threaded runtime (explicit clock) cannot use "
+                "it — pass engine='scalar' or drop the clock"
             )
         w = spec.workload
         # Per-node clocks: fresh VirtualClocks in lock-step mode, the one
@@ -609,10 +630,14 @@ class RuntimeCluster:
             peer_lookup=peer_lookup,
             bucket_read=bucket_read,
             insert=cache.put,
-            bucket=bucket_model,
-            network=network,
-            pipeline=pipeline,
-            sample_bytes=self.spec.workload.sample_bytes,
+            # The same kernel construction NodeSimulator performs from ITS
+            # profile-scaled models — same inputs, same precomputed floats.
+            kernel=DemandKernel.from_models(
+                bucket=bucket_model,
+                network=network,
+                pipeline=pipeline,
+                sample_bytes=self.spec.workload.sample_bytes,
+            ),
             insert_on_miss=insert_on_miss,
         )
 
