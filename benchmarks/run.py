@@ -26,6 +26,7 @@ MODULES = [
     "fig11_stragglers",
     "fig12_oracle_gap",
     "fig13_scaling",
+    "fig14_cluster_placement",
     "table2_cost",
     "beyond_paper",
     "roofline_report",

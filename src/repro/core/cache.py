@@ -129,6 +129,10 @@ class CappedCache:
     given) or kept in RAM anyway (pure-RAM mode, used by the simulator where
     payloads are sizes, not bytes).  ``eviction_policy`` selects victims
     (default: ``FifoEviction``, the capped-collection order).
+    ``spill_order`` selects *which* RAM payloads spill when ``ram_items``
+    overflows (default ``None`` = oldest inserts, the historical FIFO slice
+    pinned byte-for-byte; ``repro.oracle.OracleSpillOrder`` spills
+    farthest-future-use keys first).
     """
 
     def __init__(
@@ -139,6 +143,7 @@ class CappedCache:
         spill_dir: Optional[str] = None,
         session: str = "default",
         eviction_policy: Optional[EvictionPolicy] = None,
+        spill_order=None,
     ):
         if max_items is not None and max_items <= 0:
             raise ValueError("max_items must be positive or None")
@@ -150,6 +155,7 @@ class CappedCache:
         self.spill_dir = spill_dir
         self.session = session
         self.eviction_policy = eviction_policy or FifoEviction()
+        self.spill_order = spill_order
         self.stats = CacheStats()
         # Replication-aware eviction (Hoard-style): a guard saying "this
         # index must not be evicted" (e.g. it is the last cluster-resident
@@ -211,7 +217,14 @@ class CappedCache:
             return
         in_ram = [k for k, v in self._entries.items() if v is not None]
         excess = len(in_ram) - self.ram_items
-        for key in in_ram[:excess]:
+        if excess <= 0:
+            return
+        to_spill = (
+            in_ram[:excess]
+            if self.spill_order is None
+            else self.spill_order.select(in_ram, excess)
+        )
+        for key in to_spill:
             payload = self._entries[key]
             assert payload is not None
             with open(self._spill_path(key), "wb") as f:

@@ -183,6 +183,15 @@ class DeliLoader:
             if self.planner_factory is not None
             else PrefetchPlanner(order, self.config)
         )
+        # Mirrored line (NodeSimulator.begin_epoch): a cluster-placement
+        # planner carries the epoch's ownership set — install it on the
+        # shared service, whose round partition enforces it identically on
+        # both projections.
+        owned = getattr(planner, "owned", None)
+        if owned is not None and self.service is not None:
+            self.service.set_placement(
+                owned, in_flight=getattr(planner, "in_flight", None)
+            )
         consumed = 0
         in_batch = skip % self.batch_size
         self._active_stats = stats

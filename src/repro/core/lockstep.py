@@ -23,6 +23,13 @@ canonical implementation of the service's event semantics —
     network (no Class B request billed) — the probe sequence
     (registry lookup -> holder peek -> record_hit) is the same one the
     demand path performs;
+  * under cluster placement (``prefetch_policy="cluster-oracle"``,
+    ``repro.oracle.placement``) the round partition gains an ownership
+    rule: keys this rank does not own are *never* bucket-fetched here —
+    if no peer holds one yet (the owner's fetch is still in flight) it is
+    **deferred** and retried at the next round, by which time it is
+    normally peer-resident.  With no placement installed the partition is
+    byte-identical to the historical peer/bucket split;
   * completions are *events*: inserts are folded into the cache only when
     ``advance_to(now)`` observes virtual time at/past the round's
     completion — the well-defined barriers are each sample access (the
@@ -301,6 +308,32 @@ class LockstepPrefetchService:
         self.samples_fetched = 0
         # Round keys pulled from a peer's cache instead of the bucket.
         self.peer_fetches = 0
+        # Cluster-placement state (``set_placement``): the keys THIS rank
+        # owns (None = no placement, historical behaviour), keys deferred
+        # because no peer held them yet, and a lifetime deferral counter.
+        self._owned: Optional[frozenset] = None
+        self._deferred: List[int] = []
+        self._in_flight: Optional[set] = None
+        self.placement_deferrals = 0
+
+    def set_placement(
+        self,
+        owned: Optional[Sequence[int]],
+        in_flight: Optional[set] = None,
+    ) -> None:
+        """Install the epoch's ownership set (cluster placement).  Called by
+        both projections' epoch drivers right after the epoch planner is
+        built; resets the deferral queue — deferred keys from a finished
+        epoch are already past their uses.  ``in_flight`` is the
+        cluster-SHARED issued-but-not-yet-inserted key set (one per
+        ``ClusterPlacementPlanner``): every rank's service marks its bucket
+        keys at issue and clears them at insertion, so any rank can tell "a
+        copy of this key is on its way" from "no copy exists anywhere".
+        Never cleared here — a round straddling the epoch barrier still
+        clears its own keys at its insertion event."""
+        self._owned = None if owned is None else frozenset(owned)
+        self._in_flight = in_flight
+        self._deferred = []
 
     # -- peer probe (identical sequence to the demand path) ------------------
     def _peer_probe(self, idx: int) -> bool:
@@ -335,6 +368,14 @@ class LockstepPrefetchService:
             keys = [k for k in keys if not self.cache.contains(k)]
             if not keys:
                 return now
+        if self._deferred:
+            # Placement: keys deferred at earlier rounds (owner fetch in
+            # flight then) retry ahead of this round's keys — their
+            # deadlines are earlier.  Locally-resident ones are dropped: a
+            # demand probe already pulled them.
+            retry = [k for k in self._deferred if not self.cache.contains(k)]
+            self._deferred = []
+            keys = retry + keys
         start = max(now, self.free_at)
         listing_s = 0.0
         if self.list_every_fetch or self.rounds == 0:
@@ -344,20 +385,47 @@ class LockstepPrefetchService:
             )
         # Peer tier: keys a peer already holds travel the inter-node network
         # (sequential RPCs) instead of costing bucket GETs; failed probes pay
-        # the lookup RTT — the same charges as the demand path.
+        # the lookup RTT — the same charges as the demand path.  Under
+        # cluster placement, a non-owned key whose probe failed splits on
+        # the shared in-flight set: a fetch already issued somewhere means
+        # the copy is on its way — defer and retry next round (a peer hit
+        # by then).  No copy resident AND none in flight means the owner
+        # fetched and later evicted it under capacity pressure (ownership
+        # puts the owner's announce at or before any consumer's, so "not
+        # yet issued" is the rare straggler race) — the consumer
+        # bulk-fetches it itself.  The invariant is "never a duplicate
+        # bucket GET while a copy is resident or in flight"; an absent copy
+        # must not degrade a cheap amortized prefetch GET into a serial
+        # demand GET.
         bucket_keys = keys
+        fetch_keys = keys  # the keys this round actually delivers
         peer_s = 0.0
         if self.registry is not None:
             bucket_keys = []
+            fetch_keys = []
             n_peer = 0
+            n_deferred = 0
             for k in keys:
                 if self._peer_probe(k):
                     n_peer += 1
-                else:
+                    fetch_keys.append(k)
+                elif self._owned is None or k in self._owned:
                     bucket_keys.append(k)
+                    fetch_keys.append(k)
+                elif self._in_flight is None or k in self._in_flight:
+                    self._deferred.append(k)
+                    n_deferred += 1
+                else:
+                    # Owner copy neither resident nor in flight: duplicate
+                    # (bulk) GET beats a guaranteed serial demand GET.
+                    bucket_keys.append(k)
+                    fetch_keys.append(k)
+            self.placement_deferrals += n_deferred
+            if self._in_flight is not None:
+                self._in_flight.update(bucket_keys)
             peer_s = n_peer * self.network.transfer_seconds(
                 self.sample_bytes
-            ) + len(bucket_keys) * self.network.lookup_seconds()
+            ) + (len(bucket_keys) + n_deferred) * self.network.lookup_seconds()
             self.peer_fetches += n_peer
             if stats is not None and n_peer:
                 stats.record("peer", n_peer)
@@ -375,14 +443,17 @@ class LockstepPrefetchService:
         self.store_stats.class_b_requests += len(bucket_keys)
         self.store_stats.bytes_read += len(bucket_keys) * self.sample_bytes
         self.store_stats.read_seconds += dur
-        items = [(k, self._payload(k)) for k in keys]
+        items = [(k, self._payload(k)) for k in fetch_keys]
         if self.streaming_insert:
             # Spread inserts uniformly across the round duration (insert
-            # order still matters for FIFO eviction).
-            per = dur / len(keys)
-            for j, item in enumerate(items):
-                self.pending.append((start + per * (j + 1), [item]))
-        else:
+            # order still matters for FIFO eviction).  A fully-deferred
+            # placement round delivers nothing (items empty) yet still
+            # advances the worker clock by its probe RTTs.
+            if items:
+                per = dur / len(items)
+                for j, item in enumerate(items):
+                    self.pending.append((start + per * (j + 1), [item]))
+        elif items:
             self.pending.append((done, items))
         self.free_at = done
         self.rounds += 1
@@ -402,6 +473,8 @@ class LockstepPrefetchService:
             if done <= now:
                 for k, payload in items:
                     self.cache.put(k, payload)
+                    if self._in_flight is not None:
+                        self._in_flight.discard(k)
                 inserted += len(items)
             else:
                 remaining.append((done, items))

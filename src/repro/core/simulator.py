@@ -115,8 +115,18 @@ class SimConfig:
     # "oracle" replaces the fetch_size/threshold planner with the
     # clairvoyant OraclePrefetchPlanner.  Both need a local cache and the
     # bucket source; both stay exactly parity-checked.
+    # "cluster-oracle" (ISSUE 7) adds the cross-rank placement plan on top:
+    # one ClusterPlacementPlanner partitions the union of access orders so
+    # each key is bucket-fetched by exactly ONE owner rank and served to
+    # everyone else over the peer tier — hence it additionally requires
+    # peer_cache and replayable samplers (not locality_aware).
     eviction: str = "fifo"  # "fifo" | "belady"
-    prefetch_policy: str = "paper"  # "paper" | "oracle"
+    prefetch_policy: str = "paper"  # "paper" | "oracle" | "cluster-oracle"
+    # Clairvoyant round sizing (ISSUE 7 satellite): "ramp" = the historical
+    # doubling ramp (pinned byte-for-byte); "cost" = sizes solved from the
+    # calibrated bandwidth models against next-use deadlines
+    # (repro.oracle.planner.RoundCostModel).  Needs a clairvoyant policy.
+    round_sizing: str = "ramp"  # "ramp" | "cost"
     # Execution engine (ISSUE 6): "scalar" = the historical one-event-per-
     # sample Python stepper; "vector" = repro.engine.vector's segment
     # batcher, which advances runs of demand reads between cross-node
@@ -136,22 +146,42 @@ class SimConfig:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.eviction not in ("fifo", "belady"):
             raise ValueError(f"unknown eviction {self.eviction!r}")
-        if self.prefetch_policy not in ("paper", "oracle"):
+        if self.prefetch_policy not in ("paper", "oracle", "cluster-oracle"):
             raise ValueError(f"unknown prefetch_policy {self.prefetch_policy!r}")
+        if self.round_sizing not in ("ramp", "cost"):
+            raise ValueError(f"unknown round_sizing {self.round_sizing!r}")
         if self.eviction == "belady" and (
             self.cache_items is None or self.source == "disk"
         ):
             raise ValueError("eviction='belady' needs a local cache (bucket source)")
-        if self.prefetch_policy == "oracle":
+        if self.prefetch_policy in ("oracle", "cluster-oracle"):
             if self.cache_items is None or self.source == "disk":
                 raise ValueError(
-                    "prefetch_policy='oracle' needs a local cache (bucket source)"
+                    f"prefetch_policy={self.prefetch_policy!r} needs a local "
+                    "cache (bucket source)"
                 )
             if self.prefetch is not None:
                 raise ValueError(
-                    "prefetch_policy='oracle' replaces the fetch_size/threshold "
-                    "knobs; leave prefetch=None"
+                    f"prefetch_policy={self.prefetch_policy!r} replaces the "
+                    "fetch_size/threshold knobs; leave prefetch=None"
                 )
+        if self.prefetch_policy == "cluster-oracle":
+            if not self.peer_cache:
+                raise ValueError(
+                    "prefetch_policy='cluster-oracle' serves non-owned keys "
+                    "over the peer tier; set peer_cache=True"
+                )
+            if self.locality_aware:
+                raise ValueError(
+                    "prefetch_policy='cluster-oracle' needs replayable "
+                    "samplers; the locality sampler's order depends on "
+                    "runtime cache state"
+                )
+        if self.round_sizing == "cost" and self.prefetch_policy == "paper":
+            raise ValueError(
+                "round_sizing='cost' requires a clairvoyant prefetch_policy "
+                "('oracle' or 'cluster-oracle')"
+            )
 
     def label(self) -> str:
         sched = "+bsync" if self.sync == "batch" else ""
@@ -167,8 +197,9 @@ class SimConfig:
             peer += "+repl"
         if self.eviction == "belady":
             peer += "+belady"
-        if self.prefetch_policy == "oracle":
-            return f"cache[{cache}]{peer}+pf(oracle){sched}"
+        if self.prefetch_policy in ("oracle", "cluster-oracle"):
+            sizing = ",cost" if self.round_sizing == "cost" else ""
+            return f"cache[{cache}]{peer}+pf({self.prefetch_policy}{sizing}){sched}"
         if self.prefetch is None:
             return f"cache[{cache}]{peer}{sched}"
         return (
@@ -235,10 +266,23 @@ class NodeSimulator:
         # off a per-node NodeAccessView, installed by the cluster driver
         # (``attach_oracle_view``) or auto-created (current-epoch horizon)
         # for standalone single-node use at ``begin_epoch``.
-        self._oracle_prefetch = cfg.prefetch_policy == "oracle"
+        self._oracle_prefetch = cfg.prefetch_policy in ("oracle", "cluster-oracle")
         self._needs_oracle = self._oracle_prefetch or cfg.eviction == "belady"
         self.oracle_view = None  # repro.oracle.NodeAccessView when needed
         self._belady = None
+        # Cluster placement (ISSUE 7): the cross-rank ownership planner,
+        # installed by simulate_cluster for cluster-oracle specs.
+        self._placement = None
+        self._round_cost = None  # RoundCostModel for round_sizing="cost"
+        if cfg.round_sizing == "cost":
+            from repro.oracle.planner import RoundCostModel  # lazy (cycle rule)
+
+            self._round_cost = RoundCostModel.from_models(
+                bucket=self.bucket,
+                pipeline=self.pipeline,
+                sample_bytes=spec.sample_bytes,
+                n_connections=cfg.n_connections,
+            )
         # Mirror of RuntimeCluster's ``insert_on_miss``: the demand path
         # inserts into the cache exactly when no *active* pre-fetch service
         # owns population (paper §IV-B vs §IV-C) — a present-but-disabled
@@ -321,6 +365,16 @@ class NodeSimulator:
             kernel=self.kernel,
             insert_on_miss=self._insert_on_miss,
         )
+
+    def attach_placement(self, placement) -> None:
+        """Install the cluster-wide placement planner
+        (``repro.oracle.placement.ClusterPlacementPlanner``), wired by the
+        cluster driver for ``prefetch_policy="cluster-oracle"`` specs —
+        one shared instance across all ranks, so every rank partitions
+        ownership against the same memoized epoch plan.  Eviction stays
+        per-rank (the rank's own clairvoyant view): placement's cross-rank
+        runtime state is the shared in-flight set alone."""
+        self._placement = placement
 
     def attach_oracle_view(self, view) -> None:
         """Install this node's clairvoyant view (``repro.oracle``), wired
@@ -443,13 +497,25 @@ class NodeSimulator:
             # lock-step runtime builds its planner through the same call.
             self._planner = planner_for(
                 order,
-                policy="oracle",
+                policy=self.cfg.prefetch_policy,
                 config=None,
                 capacity=self.cfg.cache_items,
                 resident=self.cache.contains,
+                sizing=self.cfg.round_sizing,
+                cost_model=self._round_cost,
+                placement=self._placement,
+                rank=self.node_id,
             )
         else:
             self._planner = PrefetchPlanner(order, pf)
+        # Mirrored line (DeliLoader._sample_steps): a placement planner
+        # carries the epoch's ownership set — install it on the shared
+        # service, whose round partition enforces it on both projections.
+        owned = getattr(self._planner, "owned", None)
+        if owned is not None and self.service is not None:
+            self.service.set_placement(
+                owned, in_flight=getattr(self._planner, "in_flight", None)
+            )
         self._planner_iter = iter(self._planner)
         self._samples_in_batch = 0
         self._events = self._epoch_events(self._build_substep())
@@ -645,7 +711,7 @@ def simulate_cluster(
     samplers = list(samplers)
     if len(samplers) != spec.n_nodes:
         raise ValueError(f"need {spec.n_nodes} samplers, got {len(samplers)}")
-    if cfg.eviction == "belady" or cfg.prefetch_policy == "oracle":
+    if cfg.eviction == "belady" or cfg.prefetch_policy in ("oracle", "cluster-oracle"):
         # Clairvoyant views over the driver's own samplers (ISSUE 5); the
         # lock-step RuntimeCluster builds the identical AccessOracle over
         # the identically-constructed samplers, so every next_use answer —
@@ -655,6 +721,16 @@ def simulate_cluster(
         oracle = AccessOracle(samplers)
         for rank, node in enumerate(nodes):
             node.attach_oracle_view(oracle.view(rank))
+    if cfg.prefetch_policy == "cluster-oracle":
+        # The cross-rank ownership plan (ISSUE 7): ONE planner instance over
+        # the same samplers, shared by all ranks; RuntimeCluster builds its
+        # own over identically-constructed samplers, so the partitions — a
+        # pure function of the seeded orders — match exactly.
+        from repro.oracle import ClusterPlacementPlanner
+
+        placement = ClusterPlacementPlanner(samplers)
+        for node in nodes:
+            node.attach_placement(placement)
     locality = [s for s in samplers if hasattr(s, "update_cache_views")]
     all_stats: List[EpochStats] = []
     for e in range(epochs):

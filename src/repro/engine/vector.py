@@ -42,7 +42,12 @@ a residency bitmask maintained by the cache's residency listener.
 
 Epochs with a peer-cache registry fall back to inherited scalar stepping:
 peer probes are per-sample cross-node interactions — there is no segment
-to batch — and the registry also owns the residency-listener slot.
+to batch — and the registry also owns the residency-listener slot.  This
+also covers cluster placement (``prefetch_policy="cluster-oracle"``): the
+spec validation requires a peer cache, so placement epochs always take
+the scalar path here and the cross-rank in-flight set never interacts
+with vectorized segments — ``engine="vector"`` placement specs stay in
+the exact ``==`` parity domain for free.
 """
 from __future__ import annotations
 

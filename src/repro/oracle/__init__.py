@@ -15,12 +15,23 @@ both, as policy objects the existing data plane plugs in:
   * :class:`OraclePrefetchPlanner` / :func:`planner_for`
     (``repro.oracle.planner``) — deadline-ordered, capacity-windowed,
     residency-filtered fetch rounds replacing the paper's
-    fetch-size/threshold knobs.
+    fetch-size/threshold knobs, with ramped or cost-model-solved round
+    sizes (:class:`RoundCostModel`);
+  * :class:`ClusterPlacementPlanner` / :class:`PlacementPrefetchPlanner`
+    (``repro.oracle.placement``, ISSUE 7) — the cross-rank plan: each key
+    bucket-fetched by exactly ONE owner rank ahead of its cluster-wide
+    first use, everyone else served over the peer tier;
+  * :class:`OracleSpillOrder` (``repro.oracle.eviction``) — farthest-
+    future-use RAM→disk spill selection behind ``CappedCache``'s
+    ``spill_order`` hook (FIFO spill stays the default).
 
 Surfaced declaratively as ``DataPlaneSpec(eviction="belady",
-prefetch_policy="oracle")`` and the registry conditions ``"oracle"``,
-``"oracle+peer"`` and ``"belady-only"``; quantified against the heuristics
-by ``benchmarks/fig12_oracle_gap.py``.  Everything here is pure logic
+prefetch_policy="oracle"|"cluster-oracle", round_sizing="ramp"|"cost")``
+and the registry conditions ``"oracle"``, ``"oracle+peer"``,
+``"oracle-cost"``, ``"cluster-oracle"``, ``"cluster-oracle+peer-capped"``
+and ``"belady-only"``; quantified against the heuristics by
+``benchmarks/fig12_oracle_gap.py`` and against per-rank planning by
+``benchmarks/fig14_cluster_placement.py``.  Everything here is pure logic
 instantiated by BOTH projections, so oracle specs stay inside the
 exact-parity domain (docs/PARITY.md).
 
@@ -28,10 +39,12 @@ Import discipline: ``repro.oracle`` imports ``repro.core`` submodules;
 ``repro.core`` modules import this package only lazily (function scope),
 never at module level — same rule as ``repro.distributed``.
 """
-from repro.oracle.eviction import BeladyEviction
+from repro.oracle.eviction import BeladyEviction, OracleSpillOrder
 from repro.oracle.oracle import NEVER, AccessOracle, NodeAccessView, replayable
+from repro.oracle.placement import ClusterPlacementPlanner, PlacementPrefetchPlanner
 from repro.oracle.planner import (
     OraclePrefetchPlanner,
+    RoundCostModel,
     make_planner_factory,
     planner_for,
 )
@@ -40,8 +53,12 @@ __all__ = [
     "NEVER",
     "AccessOracle",
     "BeladyEviction",
+    "ClusterPlacementPlanner",
     "NodeAccessView",
     "OraclePrefetchPlanner",
+    "OracleSpillOrder",
+    "PlacementPrefetchPlanner",
+    "RoundCostModel",
     "make_planner_factory",
     "planner_for",
     "replayable",

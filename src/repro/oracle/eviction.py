@@ -23,6 +23,14 @@ The scan is O(cache size) per eviction with O(1) ``next_use`` lookups;
 the capped caches in this repo's experiments hold sample counts, not
 gigabytes, so the scan is the same order of work the guarded FIFO path
 already did.
+
+:class:`OracleSpillOrder` applies the same farthest-future-use idea one
+tier down (ISSUE 7 satellite): when the RAM tier overflows its
+``ram_items`` budget and payloads spill to the disk tier, spill the keys
+whose next use is farthest away — the near-future keys stay in RAM and are
+served at RAM-hit latency instead of paying a disk read.  FIFO spill
+(oldest inserts first) remains ``CappedCache``'s default, pinned
+byte-for-byte.
 """
 from __future__ import annotations
 
@@ -81,3 +89,34 @@ class BeladyEviction(EvictionPolicy):
             return fallback, 0  # everything guarded: capacity wins
         skips = sum(1 for use in guarded_uses if use > victim_use)
         return victim, skips
+
+
+class OracleSpillOrder:
+    """Farthest-future-use RAM→disk spill selection (``CappedCache``'s
+    ``spill_order`` hook).
+
+    Same attach-after-construction shape as :class:`BeladyEviction` — the
+    cache outlives epochs, the clairvoyant view is installed per epoch —
+    but spilling is *graceful* where eviction is not: with no view bound
+    (or a drained horizon, where every ``next_use`` is :data:`NEVER`) the
+    selection degrades exactly to the FIFO slice, because the sort below is
+    stable and equal keys keep insertion order.
+    """
+
+    name = "oracle-spill"
+
+    def __init__(self, view: Optional[NodeAccessView] = None):
+        self.view = view
+
+    def attach_view(self, view: NodeAccessView) -> None:
+        self.view = view
+
+    def select(self, in_ram: List[SampleKey], excess: int) -> List[SampleKey]:
+        """Pick ``excess`` of the RAM-resident ``in_ram`` keys (given in
+        FIFO insertion order) to spill to disk: farthest next use first,
+        FIFO tie-break via sort stability; never-again keys (``NEVER`` =
+        inf) spill before everything."""
+        if self.view is None:
+            return in_ram[:excess]
+        ranked = sorted(in_ram, key=lambda k: -self.view.next_use(k.index))
+        return ranked[:excess]

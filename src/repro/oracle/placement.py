@@ -1,0 +1,196 @@
+"""Cluster clairvoyant placement: one cross-rank plan, one bucket GET per key.
+
+The per-rank oracle (``repro.oracle.planner``) removes every *local*
+inefficiency — rounds are deadline-ordered, capacity-windowed and
+residency-filtered — but each rank still plans in isolation, so a key that
+appears in several ranks' epochs is bucket-fetched by several ranks.  In
+the shared-shuffle regime (every rank streams the full dataset) that
+multiplies cluster-wide Class B by the world size.  Hoard (PAPERS.md)
+shows the fix at the placement level — partition the dataset across node
+caches and serve everyone over the peer tier — and NoPFS shows the access
+orders are exactly knowable ahead of time.  This module combines them:
+
+  * :class:`ClusterPlacementPlanner` replays every rank's epoch order
+    (the same seeded-sampler replay as ``AccessOracle``) and assigns each
+    key exactly ONE **owner**: the rank whose first use of the key is the
+    cluster-wide earliest (ties broken by rank — deterministic, so both
+    projections compute the identical partition).  Owning rank r means
+    "r bucket-fetches the key; everyone else peer-pulls it from r".
+  * :class:`PlacementPrefetchPlanner` is the per-rank epoch planner it
+    hands out: the *announce schedule is inherited unchanged* from
+    ``OraclePrefetchPlanner`` (deadline order, capacity window, ramp or
+    cost sizing, residency filter), it merely carries the rank's ``owned``
+    set.  The actual bucket-vs-peer-vs-defer split happens where fetches
+    are billed — the shared ``LockstepPrefetchService`` partitions each
+    round by ownership (``set_placement``), so both projections execute
+    the identical event code.
+
+Why the owner's fetch precedes every consumer's first use (uncapped
+capacity): the owner's first use of a key is, by construction, the
+cluster-wide earliest, and ``announce_schedule`` announces each key at or
+before its own consume position — so the owner's fetch round is issued at
+or before the earliest use anywhere.  A consumer announcing the key while
+that fetch is still in flight defers it (the cluster-shared ``in_flight``
+set is the signal) and retries at its next announce point, by then a peer
+hit.  Under capacity pressure the owner may already have *evicted* its
+copy — neither resident nor in flight — and then the consumer bucket-
+fetches the key itself: a planned duplicate on a cheap amortized bulk GET
+instead of a guaranteed serial demand GET at consume time.  The invariant
+is "never a duplicate bucket GET while a copy is resident or in flight";
+with capacity to hold the plan, that is exactly one GET per key.
+
+Pure planning logic: no clocks, no I/O.  Both projections instantiate
+planners through the one ``repro.oracle.planner.planner_for`` factory
+(``policy="cluster-oracle"``), keeping placement specs inside the exact
+``==`` parity domain (docs/PARITY.md).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence
+
+from repro.oracle.oracle import replayable
+from repro.oracle.planner import OraclePrefetchPlanner, RoundCostModel
+
+class PlacementPrefetchPlanner(OraclePrefetchPlanner):
+    """A rank's slice of the cluster plan: the per-rank oracle schedule
+    plus the frozen set of keys this rank owns (bucket-fetches).
+
+    Deliberately *nothing else* changes relative to the per-rank planner:
+    the announce positions, round sizes and residency filtering are
+    inherited verbatim, so the clairvoyant deadline guarantees carry over
+    and the only new behaviour is where each key's bytes come from.
+    """
+
+    def __init__(
+        self,
+        order: Sequence[int],
+        owned: FrozenSet[int],
+        capacity: Optional[int] = None,
+        resident: Optional[Callable[[int], bool]] = None,
+        sizing: str = "ramp",
+        cost_model: Optional[RoundCostModel] = None,
+        in_flight: Optional[set] = None,
+    ):
+        super().__init__(
+            order, capacity=capacity, resident=resident, sizing=sizing, cost_model=cost_model
+        )
+        #: Keys this rank bucket-fetches; every other key in its order is
+        #: peer-pulled (or deferred until a peer holds it).  Drivers hand
+        #: this to ``LockstepPrefetchService.set_placement`` at epoch start.
+        self.owned = frozenset(owned)
+        #: The cluster-shared issued-but-not-inserted key set (one per
+        #: ``ClusterPlacementPlanner``), handed to ``set_placement`` along
+        #: with ``owned`` so every rank's service sees peers' fetches.
+        self.in_flight = in_flight
+
+
+class ClusterPlacementPlanner:
+    """The cross-rank planner: replay all epoch orders, partition ownership.
+
+    Constructed from the per-rank samplers both projections already build
+    identically (``DataPlaneSpec.build_samplers`` / ``simulate_cluster``'s
+    ``samplers=``).  Requires every sampler to be replayable — a sampler
+    whose order depends on runtime cluster state (``locality``) cannot be
+    planned for before the epoch runs, and the planner refuses rather than
+    partitioning a wrong future.
+    """
+
+    def __init__(self, samplers: Sequence):
+        if not samplers:
+            raise ValueError("ClusterPlacementPlanner needs at least one sampler")
+        for rank, sampler in enumerate(samplers):
+            if not replayable(sampler):
+                raise ValueError(
+                    "cluster-oracle placement requires replayable samplers; "
+                    f"rank {rank}'s sampler ({type(sampler).__name__}) depends "
+                    "on runtime cache state"
+                )
+        self.samplers = list(samplers)
+        self.world = len(self.samplers)
+        self._owned: Dict[int, List[FrozenSet[int]]] = {}
+        self._orders: Dict[int, List[List[int]]] = {}
+        #: Keys with a bucket fetch issued but not yet inserted, anywhere in
+        #: the cluster — the services' shared "copy on its way" signal.
+        #: Deliberately the ONLY cross-rank runtime state placement adds:
+        #: eviction stays per-rank Belady/FIFO (cluster-wide retention of
+        #: owned keys was measured and rejected — it displaces the rank's
+        #: own announced window, turning cheap planned duplicates into
+        #: serial demand misses).
+        self.in_flight: set = set()
+
+    def epoch_orders(self, epoch: int) -> List[List[int]]:
+        """Every rank's exact order for ``epoch`` (the AccessOracle replay:
+        temporarily move the sampler's epoch, restore after); memoized."""
+        cached = self._orders.get(epoch)
+        if cached is not None:
+            return cached
+        orders: List[List[int]] = []
+        for sampler in self.samplers:
+            saved = sampler.epoch
+            try:
+                sampler.set_epoch(epoch)
+                orders.append(list(sampler.indices()))
+            finally:
+                sampler.set_epoch(saved)
+        self._orders[epoch] = orders
+        # Keep the memo bounded: ownership only ever re-reads the current
+        # epoch (the previous one is kept for boundary stragglers).
+        for stale in [e for e in self._orders if e < epoch - 1]:
+            del self._orders[stale]
+        return orders
+
+    def owned_sets(self, epoch: int) -> List[FrozenSet[int]]:
+        """The epoch's ownership partition: ``result[r]`` is the set of
+        keys rank ``r`` bucket-fetches.  Each key in the union of orders
+        appears in exactly one set — the rank whose first use of it is the
+        cluster-wide earliest, ties to the lowest rank (min over ranks of
+        ``(first_use_position, rank)``).  Memoized per epoch; pure function
+        of the seeded samplers, so both projections agree exactly."""
+        cached = self._owned.get(epoch)
+        if cached is not None:
+            return cached
+        best: Dict[int, tuple] = {}  # key -> (first_use_position, rank)
+        for rank, order in enumerate(self.epoch_orders(epoch)):
+            seen = set()
+            for pos, key in enumerate(order):
+                if key in seen:
+                    continue
+                seen.add(key)
+                claim = (pos, rank)
+                if key not in best or claim < best[key]:
+                    best[key] = claim
+        owned: List[set] = [set() for _ in range(self.world)]
+        for key, (_, rank) in best.items():
+            owned[rank].add(key)
+        result = [frozenset(s) for s in owned]
+        self._owned[epoch] = result
+        for stale in [e for e in self._owned if e < epoch - 1]:
+            del self._owned[stale]
+        return result
+
+    def planner(
+        self,
+        rank: int,
+        order: Sequence[int],
+        *,
+        capacity: Optional[int] = None,
+        resident: Optional[Callable[[int], bool]] = None,
+        sizing: str = "ramp",
+        cost_model: Optional[RoundCostModel] = None,
+    ) -> PlacementPrefetchPlanner:
+        """Rank ``rank``'s epoch planner (the ``planner_for`` entry point).
+
+        The epoch is read off the rank's sampler — by the time either
+        projection builds its planner the sampler is already positioned at
+        the epoch being run, and ``order`` is that sampler's realized
+        order, so the replayed partition matches it exactly."""
+        epoch = self.samplers[rank].epoch
+        return PlacementPrefetchPlanner(
+            order,
+            owned=self.owned_sets(epoch)[rank],
+            capacity=capacity,
+            resident=resident,
+            sizing=sizing,
+            cost_model=cost_model,
+            in_flight=self.in_flight,
+        )

@@ -28,19 +28,94 @@ protocol) that plans each round clairvoyantly:
     shared ``LockstepPrefetchService.issue`` already performs — the planner
     composes with it rather than duplicating it.
 
+Round sizing comes in two flavours (ISSUE 7 satellite):
+
+  * ``sizing="ramp"`` (default) — the historical doubling ramp above,
+    pinned byte-for-byte;
+  * ``sizing="cost"`` — deadline-solved sizes from the calibrated
+    bandwidth models (:class:`RoundCostModel`): each round is the largest
+    one whose modelled bulk-GET duration still completes within the
+    virtual time the training loop needs to drain the keys already
+    announced (every pending key costs at least the RAM-hit + CPU floor).
+    The opening rounds stay small for the same cold-start reason; steady-
+    state rounds grow exactly as fast as the models say the loop can hide
+    them, instead of by powers of two.
+
 Pure logic, no clocks, no I/O — the same discipline as
 ``repro.core.policy`` — so both projections iterate the identical plan.
 ``planner_for``/``make_planner_factory`` are THE construction points: the
 simulator (``NodeSimulator.begin_epoch``) and the lock-step runtime
 (``RuntimeCluster`` via ``DeliLoader(planner_factory=...)``) both build
-their epoch planner here, which is what keeps oracle specs inside the
-exact-parity domain (docs/PARITY.md).
+their epoch planner here — including the cluster-placement planner
+(``policy="cluster-oracle"``, ``repro.oracle.placement``) — which is what
+keeps oracle specs inside the exact-parity domain (docs/PARITY.md).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCostModel:
+    """Calibrated inputs of cost-aware round sizing (``sizing="cost"``).
+
+    ``bucket`` is the node's (profile-scaled) ``BucketModel``; ``floor_s``
+    is the per-sample virtual-time floor of the consuming loop — the
+    RAM-hit latency plus the per-sample CPU overhead, i.e. the fastest the
+    training loop can possibly drain one already-cached key.  Both
+    projections construct this from the same profile-scaled models, so the
+    solved sizes are identical floats on both sides.
+    """
+
+    bucket: object  # duck-typed BucketModel (repro.core.bandwidth)
+    sample_bytes: int
+    floor_s: float
+    n_connections: int = 16
+
+    @classmethod
+    def from_models(cls, *, bucket, pipeline, sample_bytes: int, n_connections: int = 16):
+        return cls(
+            bucket=bucket,
+            sample_bytes=sample_bytes,
+            floor_s=pipeline.ram_hit_s + pipeline.cpu_overhead_s,
+            n_connections=n_connections,
+        )
+
+    def round_seconds(self, size: int) -> float:
+        """Modelled duration of one ``size``-key bulk fetch round."""
+        return self.bucket.bulk_get_seconds(
+            [self.sample_bytes] * size, self.n_connections
+        )
+
+    def deadline_size(self, pending: int, cap: int) -> int:
+        """The largest round size in ``[1, cap]`` whose modelled duration
+        still fits inside the loop-time the ``pending`` already-announced
+        keys buy (``max(pending, 1) * floor_s``): the round completes
+        before the consumer runs dry, so its first key's deadline is met
+        without a cold-start stall.  Returns at least 1 — a refill point
+        must announce *something*.  Deterministic integer search (doubling
+        then bisection) over a pure float function, so both projections
+        solve the identical size."""
+        if cap <= 1:
+            return 1
+        budget = max(pending, 1) * self.floor_s
+        if self.round_seconds(1) > budget:
+            return 1
+        lo, hi = 1, 2  # round_seconds(lo) is known to fit
+        while hi < cap and self.round_seconds(hi) <= budget:
+            lo, hi = hi, min(hi * 2, cap)
+        if self.round_seconds(hi) <= budget:
+            return hi
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if self.round_seconds(mid) <= budget:
+                lo = mid
+            else:
+                hi = mid
+        return lo
 
 
 def _window(capacity: Optional[int], n: int) -> int:
@@ -73,10 +148,18 @@ class OraclePrefetchPlanner:
         order: Sequence[int],
         capacity: Optional[int] = None,
         resident: Optional[Callable[[int], bool]] = None,
+        sizing: str = "ramp",
+        cost_model: Optional[RoundCostModel] = None,
     ):
+        if sizing not in ("ramp", "cost"):
+            raise ValueError(f"unknown round sizing {sizing!r}; expected 'ramp' or 'cost'")
+        if sizing == "cost" and cost_model is None:
+            raise ValueError("sizing='cost' requires a RoundCostModel")
         self.order = list(order)
         self.capacity = capacity
         self.resident = resident
+        self.sizing = sizing
+        self.cost_model = cost_model
         self.rounds_issued = 0
         #: Keys skipped at announce time because they were already cached
         #: locally (the re-fetches the heuristic planner would have paid).
@@ -102,10 +185,14 @@ class OraclePrefetchPlanner:
         while consumed < n:
             pending = announced - consumed
             if announced < n and pending <= refill_at:
-                take = min(size, window - pending, n - announced)
+                cap = min(window - pending, n - announced)
+                if self.sizing == "cost":
+                    take = min(self.cost_model.deadline_size(pending, cap), cap)
+                else:
+                    take = min(size, cap)
                 chunk = self.order[announced : announced + take]
                 announced += len(chunk)
-                if size < window:
+                if self.sizing == "ramp" and size < window:
                     size = min(size * 2, window)
                 schedule.append((consumed, chunk))
             consumed += 1
@@ -140,17 +227,47 @@ def planner_for(
     config: Optional[PrefetchConfig],
     capacity: Optional[int] = None,
     resident: Optional[Callable[[int], bool]] = None,
+    sizing: str = "ramp",
+    cost_model: Optional[RoundCostModel] = None,
+    placement=None,
+    rank: int = 0,
 ):
     """THE epoch-planner construction, shared verbatim by both projections.
 
     ``policy="paper"`` builds the heuristic ``PrefetchPlanner`` from the
     fetch-size/threshold ``config``; ``policy="oracle"`` builds the
-    clairvoyant planner (``config`` is ignored — the oracle has no knobs).
+    clairvoyant planner (``config`` is ignored — the oracle has no knobs);
+    ``policy="cluster-oracle"`` asks the cluster-wide ``placement``
+    (:class:`repro.oracle.placement.ClusterPlacementPlanner`) for this
+    rank's epoch planner — same announce schedule, plus the ownership set
+    that partitions bucket fetches across the cluster.
     """
+    if policy == "cluster-oracle":
+        if placement is None:
+            raise ValueError("policy='cluster-oracle' requires a ClusterPlacementPlanner")
+        return placement.planner(
+            rank,
+            order,
+            capacity=capacity,
+            resident=resident,
+            sizing=sizing,
+            cost_model=cost_model,
+        )
     if policy == "oracle":
-        return OraclePrefetchPlanner(order, capacity=capacity, resident=resident)
+        return OraclePrefetchPlanner(
+            order,
+            capacity=capacity,
+            resident=resident,
+            sizing=sizing,
+            cost_model=cost_model,
+        )
     if policy != "paper":
-        raise ValueError(f"unknown prefetch policy {policy!r}; expected 'paper' or 'oracle'")
+        raise ValueError(
+            f"unknown prefetch policy {policy!r}; "
+            "expected 'paper', 'oracle' or 'cluster-oracle'"
+        )
+    if sizing != "ramp":
+        raise ValueError("round sizing overrides require a clairvoyant policy")
     if config is None:
         config = PrefetchConfig.disabled()
     return PrefetchPlanner(order, config)
@@ -162,8 +279,20 @@ def make_planner_factory(
     config: Optional[PrefetchConfig],
     capacity: Optional[int] = None,
     resident: Optional[Callable[[int], bool]] = None,
+    sizing: str = "ramp",
+    cost_model: Optional[RoundCostModel] = None,
+    placement=None,
+    rank: int = 0,
 ) -> Callable[[Sequence[int]], object]:
     """Bind everything but the epoch order (``DeliLoader.planner_factory``)."""
     return lambda order: planner_for(
-        order, policy=policy, config=config, capacity=capacity, resident=resident
+        order,
+        policy=policy,
+        config=config,
+        capacity=capacity,
+        resident=resident,
+        sizing=sizing,
+        cost_model=cost_model,
+        placement=placement,
+        rank=rank,
     )

@@ -274,6 +274,66 @@ def _oracle_peer(workload: WorkloadSpec, cache_items: int = 2048, **kw) -> DataP
     )
 
 
+@register_condition("oracle-cost")
+def _oracle_cost(workload: WorkloadSpec, cache_items: int = 2048, **kw) -> DataPlaneSpec:
+    """Oracle data plane with cost-aware round sizing (ISSUE 7 satellite):
+    round sizes are solved from the calibrated bandwidth models against
+    next-use deadlines (``repro.oracle.RoundCostModel``) instead of the
+    doubling ramp.  Everything else matches the ``"oracle"`` condition."""
+    kw.setdefault("list_every_fetch", False)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        prefetch_policy="oracle",
+        eviction="belady",
+        round_sizing="cost",
+        **kw,
+    )
+
+
+@register_condition("cluster-oracle")
+def _cluster_oracle(
+    workload: WorkloadSpec, cache_items: int = 2048, **kw
+) -> DataPlaneSpec:
+    """Cluster clairvoyant placement (ISSUE 7 tentpole): ONE cross-rank
+    plan partitions the union of epoch orders so each key is bucket-fetched
+    by exactly one owner rank ahead of its cluster-wide first use and
+    served to every other rank over the peer tier — Hoard's placement idea
+    driven by NoPFS's clairvoyance.  Per-rank scheduling (deadline order,
+    capacity window, residency filter) is unchanged from ``"oracle+peer"``;
+    only the bucket/peer/defer partition of each round differs.  Quantified
+    by ``benchmarks/fig14_cluster_placement.py``."""
+    kw.setdefault("list_every_fetch", False)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        prefetch_policy="cluster-oracle",
+        eviction="belady",
+        peer_cache=True,
+        **kw,
+    )
+
+
+@register_condition("cluster-oracle+peer-capped")
+def _cluster_oracle_capped(
+    workload: WorkloadSpec, cache_frac: float = 0.5, **kw
+) -> DataPlaneSpec:
+    """Cluster placement under capacity pressure: each node's cache holds
+    only ``cache_frac`` of its per-rank shard, so the ownership plan must
+    survive evictions and deferral retries (the graceful-degradation regime
+    the placement tests sweep)."""
+    cache_items = max(2, int(workload.partition_size * cache_frac))
+    kw.setdefault("list_every_fetch", False)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        prefetch_policy="cluster-oracle",
+        eviction="belady",
+        peer_cache=True,
+        **kw,
+    )
+
+
 @register_condition("batch-sync")
 def _batch_sync(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
     """Per-batch allreduce barriers (data-parallel SGD schedule, ISSUE 4):

@@ -71,7 +71,13 @@ from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
 from repro.engine.kernels import DemandKernel
-from repro.oracle import AccessOracle, BeladyEviction, make_planner_factory
+from repro.oracle import (
+    AccessOracle,
+    BeladyEviction,
+    ClusterPlacementPlanner,
+    RoundCostModel,
+    make_planner_factory,
+)
 from repro.pipeline.tiers import DiskSourceTier
 
 
@@ -130,9 +136,18 @@ class DataPlaneSpec:
         uses the ``prefetch`` knobs; ``"oracle"`` replaces them with the
         clairvoyant ``OraclePrefetchPlanner`` (deadline-ordered,
         capacity-windowed, residency-filtered rounds — leave
-        ``prefetch=None``).  Needs a cache, bucket source, and the
-        lock-step runtime (a free-running threaded service has no
-        deterministic cursor for the oracle to trust).
+        ``prefetch=None``).  ``"cluster-oracle"`` (ISSUE 7) adds the
+        cross-rank placement plan: one ``ClusterPlacementPlanner``
+        partitions the union of access orders so each key is bucket-fetched
+        by exactly ONE owner rank and served to everyone else over the peer
+        tier (requires ``peer_cache`` and a replayable sampler).  All need
+        a cache, bucket source, and the lock-step runtime (a free-running
+        threaded service has no deterministic cursor for the oracle to
+        trust).
+    round_sizing: clairvoyant round sizing (ISSUE 7 satellite).  ``"ramp"``
+        (default) = the historical doubling ramp, pinned byte-for-byte;
+        ``"cost"`` = sizes solved against next-use deadlines from the
+        calibrated bandwidth models (``repro.oracle.RoundCostModel``).
 
     Construction warns (``DataPlaneConfigWarning``) when the prefetch knobs
     are inconsistent with the cache size per the paper's findings —
@@ -158,7 +173,8 @@ class DataPlaneSpec:
     granularity: str = "step"  # "step" | "substep" (event decomposition)
     nodes: Optional[Tuple[NodeProfile, ...]] = None  # per-rank straggler profiles
     eviction: str = "fifo"  # "fifo" | "belady" (clairvoyant, ISSUE 5)
-    prefetch_policy: str = "paper"  # "paper" | "oracle" (clairvoyant, ISSUE 5)
+    prefetch_policy: str = "paper"  # "paper" | "oracle" | "cluster-oracle"
+    round_sizing: str = "ramp"  # "ramp" | "cost" (clairvoyant sizing, ISSUE 7)
     # Execution engine (ISSUE 6): "scalar" = one-event-per-sample stepping;
     # "vector" = repro.engine.vector's segment batcher (numpy array ops
     # between cross-node interaction points; exact ``==`` results).
@@ -247,6 +263,7 @@ class DataPlaneSpec:
             granularity=self.granularity,
             eviction=self.eviction,
             prefetch_policy=self.prefetch_policy,
+            round_sizing=self.round_sizing,
             engine=self.engine,
         )
 
@@ -270,6 +287,7 @@ class DataPlaneSpec:
             granularity=cfg.granularity,
             eviction=cfg.eviction,
             prefetch_policy=cfg.prefetch_policy,
+            round_sizing=cfg.round_sizing,
             engine=cfg.engine,
             seed=seed,
             **overrides,
@@ -386,7 +404,7 @@ class RuntimeCluster:
                 "threaded mode cannot implement them"
             )
         if not self.lockstep and (
-            spec.eviction == "belady" or spec.prefetch_policy == "oracle"
+            spec.eviction == "belady" or spec.prefetch_policy != "paper"
         ):
             # Same policy for the oracle data plane: the clairvoyant cursor
             # advances with the deterministic event schedule; a worker
@@ -419,7 +437,7 @@ class RuntimeCluster:
         self._disk_root: Optional[str] = None
         prefetch_on = spec.source == "bucket" and (
             (spec.prefetch is not None and spec.prefetch.enabled)
-            or spec.prefetch_policy == "oracle"
+            or spec.prefetch_policy in ("oracle", "cluster-oracle")
         )
         self.registry: Optional[PeerCacheRegistry] = (
             PeerCacheRegistry(replication_aware=spec.replication_aware_eviction)
@@ -434,7 +452,16 @@ class RuntimeCluster:
         # simulate_cluster performs over its identically-built samplers.
         self.oracle: Optional[AccessOracle] = (
             AccessOracle(self.samplers)
-            if spec.eviction == "belady" or spec.prefetch_policy == "oracle"
+            if spec.eviction == "belady"
+            or spec.prefetch_policy in ("oracle", "cluster-oracle")
+            else None
+        )
+        # The cross-rank ownership plan (ISSUE 7): ONE planner over these
+        # samplers, mirroring simulate_cluster's construction over its
+        # identically-built samplers — the partitions match exactly.
+        self.placement: Optional[ClusterPlacementPlanner] = (
+            ClusterPlacementPlanner(self.samplers)
+            if spec.prefetch_policy == "cluster-oracle"
             else None
         )
         self.services: List = []
@@ -532,15 +559,30 @@ class RuntimeCluster:
                             streaming_insert=spec.streaming_insert,
                         )
             planner_factory = None
-            if prefetch_on and spec.prefetch_policy == "oracle":
+            if prefetch_on and spec.prefetch_policy in ("oracle", "cluster-oracle"):
                 assert cache is not None  # enforced by spec validation
                 # THE shared planner construction (repro.oracle.planner) —
-                # NodeSimulator.begin_epoch builds through the same call.
+                # NodeSimulator.begin_epoch builds through the same call,
+                # including the cost model (same profile-scaled inputs) and
+                # the shared placement plan.
                 planner_factory = make_planner_factory(
-                    policy="oracle",
+                    policy=spec.prefetch_policy,
                     config=None,
                     capacity=spec.cache_items,
                     resident=cache.contains,
+                    sizing=spec.round_sizing,
+                    cost_model=(
+                        RoundCostModel.from_models(
+                            bucket=node_bucket_model,
+                            pipeline=node_pipeline,
+                            sample_bytes=w.sample_bytes,
+                            n_connections=spec.n_connections,
+                        )
+                        if spec.round_sizing == "cost"
+                        else None
+                    ),
+                    placement=self.placement,
+                    rank=rank,
                 )
             loader = DeliLoader(
                 dataset,
