@@ -27,6 +27,7 @@ MODULES = [
     "fig12_oracle_gap",
     "fig13_scaling",
     "fig14_cluster_placement",
+    "fig15_comm_overlap",
     "table2_cost",
     "beyond_paper",
     "roofline_report",

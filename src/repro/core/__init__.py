@@ -26,10 +26,13 @@ from repro.core.bandwidth import (
     DEFAULT_PIPELINE,
     DEFAULT_PROFILE,
     BucketModel,
+    CollectiveModel,
     DiskModel,
     NetworkModel,
     NodeProfile,
     PipelineCostModel,
+    arch_gradient_bytes,
+    mnist_cnn_gradient_bytes,
     straggler_profiles,
 )
 from repro.core.cache import CappedCache, EvictionPolicy, FifoEviction
@@ -49,6 +52,7 @@ from repro.core.lockstep import (
     STEP_BATCH_END,
     STEP_CONTINUE,
     STEP_DONE,
+    BucketedBatchComm,
     LockstepPrefetchService,
     SubstepAccess,
 )

@@ -122,6 +122,99 @@ class NetworkModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class CollectiveModel:
+    """Gradient-allreduce cost model on top of the calibrated intra-cluster
+    ``NetworkModel``.
+
+    The per-batch barrier (``sync="batch"``) historically released ranks
+    instantaneously once all arrived — skew was modeled, transfer was not.
+    This model gives the allreduce a duration so blocked time splits into
+    ``allreduce_wait_seconds`` (skew: waiting for stragglers to arrive) and
+    ``allreduce_comm_seconds`` (transfer: moving gradient bytes).
+
+    Two standard algorithms over ``n`` ranks exchanging ``gradient_bytes``:
+
+      * ``"ring"`` — bandwidth-optimal reduce-scatter + all-gather:
+        ``2(n-1)`` steps, each moving ``bytes/n`` over the per-flow link
+        and paying one RTT of synchronization latency.
+      * ``"tree"`` — latency-favoring reduce + broadcast:
+        ``2*ceil(log2 n)`` rounds, each moving the full buffer once.
+
+    Both are lower-bounded by the textbook ``2(n-1)/n * bytes / bw``
+    (every rank must receive all but its own shard, twice).
+
+    ``n_buckets`` decomposes the gradient for ``overlap="buckets"``: each
+    bucket's allreduce costs exactly ``allreduce_seconds(...)/n_buckets``
+    (latency amortized across the pipelined bucket stream — the olmax-style
+    bucketed step this models issues them back-to-back on one channel), so
+    bucketed total comm equals the unbucketed duration and overlap can only
+    hide, never add, time.
+
+    ``gradient_bytes=0`` is the free-allreduce limit: every duration is
+    exactly 0.0, which must reproduce the historical instantaneous-barrier
+    timeline bit-for-bit (the accounting-split bugfix's pin).
+    """
+
+    gradient_bytes: int
+    algorithm: str = "ring"
+    n_buckets: int = 4
+
+    def __post_init__(self) -> None:
+        if self.gradient_bytes < 0:
+            raise ValueError("gradient_bytes must be >= 0")
+        if self.algorithm not in ("ring", "tree"):
+            raise ValueError(f"unknown collective algorithm {self.algorithm!r}")
+        if self.n_buckets < 1:
+            raise ValueError("n_buckets must be >= 1")
+
+    def allreduce_seconds(self, network: NetworkModel, n_ranks: int) -> float:
+        """Duration of one full-gradient allreduce across ``n_ranks``."""
+        if n_ranks <= 1 or self.gradient_bytes == 0:
+            return 0.0
+        if self.algorithm == "ring":
+            steps = 2 * (n_ranks - 1)
+            return steps * (network.rtt_s + (self.gradient_bytes / n_ranks) / network.bw)
+        rounds = 2 * math.ceil(math.log2(n_ranks))
+        return rounds * (network.rtt_s + self.gradient_bytes / network.bw)
+
+    def bucket_seconds(self, network: NetworkModel, n_ranks: int) -> float:
+        """Duration of one gradient bucket's allreduce (exact 1/n_buckets
+        partition of the full duration — see class docstring)."""
+        return self.allreduce_seconds(network, n_ranks) / self.n_buckets
+
+    def ring_lower_bound_seconds(self, network: NetworkModel, n_ranks: int) -> float:
+        """The algorithm-independent bandwidth lower bound
+        ``2(n-1)/n * bytes / bw`` — both algorithms cost at least this."""
+        if n_ranks <= 1 or self.gradient_bytes == 0:
+            return 0.0
+        return 2 * (n_ranks - 1) / n_ranks * self.gradient_bytes / network.bw
+
+
+def mnist_cnn_gradient_bytes() -> int:
+    """Gradient payload of the paper's 2-conv MNIST CNN, in fp32 bytes.
+
+    conv1: 32 filters x (1 ch x 5x5 + bias)      =     832 params
+    conv2: 64 filters x (32 ch x 5x5 + bias)     =  51,264 params
+    fc1:   3136 -> 128 (+bias)                   = 401,536 params
+    fc2:   128 -> 10 (+bias)                     =   1,290 params
+    """
+    conv1 = 32 * (1 * 25 + 1)
+    conv2 = 64 * (32 * 25 + 1)
+    fc1 = 3136 * 128 + 128
+    fc2 = 128 * 10 + 10
+    return 4 * (conv1 + conv2 + fc1 + fc2)
+
+
+def arch_gradient_bytes(name: str) -> int:
+    """fp32 gradient payload for one of the assigned arch configs
+    (``repro.configs``).  Imported lazily: the configs package pulls in
+    jax, which the pure-Python data plane must not require."""
+    from repro import configs
+
+    return 4 * configs.get(name).param_count()
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineCostModel:
     """Per-sample CPU-side cost of the data pipeline (decode + collate).
 

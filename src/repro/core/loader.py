@@ -23,6 +23,7 @@ from repro.core.dataset import CachingDataset
 from repro.core.lockstep import (
     STEP_BATCH_END,
     STEP_CONTINUE,
+    BucketedBatchComm,
     SubstepAccess,
 )
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
@@ -128,6 +129,7 @@ class DeliLoader:
         pipeline_model=None,
         compute_per_batch_s: float = 0.0,
         substep: Optional[SubstepAccess] = None,
+        overlap: Optional[BucketedBatchComm] = None,
     ):
         """Process the epoch sample-by-sample, yielding
         ``(index, AccessResult, data_wait_s, consumed, batch_end)`` after
@@ -152,6 +154,12 @@ class DeliLoader:
         other nodes' events inside this access (mirroring the simulator's
         sub-step decomposition exactly — the machine IS the same object
         type running the same generator).
+
+        ``overlap`` (a ``repro.core.lockstep.BucketedBatchComm``) replaces
+        the single batch-end compute sleep with the bucketed compute/
+        allreduce pipeline — each span boundary yields ``_PHASE`` exactly
+        like a sub-step component, and only the exposed comm tail is
+        charged (ISSUE 8; same generator the simulator runs).
 
         Mid-epoch resume (ISSUE 4 bugfix): gradient batches are a property
         of the epoch's *sample order*, not of the resume point — the batch
@@ -233,7 +241,10 @@ class DeliLoader:
             if in_batch == self.batch_size:
                 in_batch = 0
                 batch_end = True
-                if compute_per_batch_s:
+                if overlap is not None:
+                    for _ in overlap.run(stats):
+                        yield _PHASE  # one bucket span = one scheduler event
+                elif compute_per_batch_s:
                     self.clock.sleep(compute_per_batch_s)
                     stats.compute_seconds += compute_per_batch_s
             yield idx, result, dt, consumed, batch_end
@@ -276,6 +287,7 @@ class DeliLoader:
         pipeline_model=None,
         compute_per_batch_s: float = 0.0,
         substep: Optional[SubstepAccess] = None,
+        overlap: Optional[BucketedBatchComm] = None,
     ) -> Iterator[int]:
         """Event-granular epoch driver for a cluster scheduler.
 
@@ -294,7 +306,7 @@ class DeliLoader:
         stats = EpochStats(epoch=self._epoch, node=self.node)
         evictions_before = self.dataset.cache.stats.evictions if self.dataset.cache else 0
         for item in self._sample_steps(
-            stats, pipeline_model, compute_per_batch_s, substep
+            stats, pipeline_model, compute_per_batch_s, substep, overlap
         ):
             if item is _PHASE:
                 yield STEP_CONTINUE
@@ -302,16 +314,22 @@ class DeliLoader:
                 yield STEP_BATCH_END if item[4] else STEP_CONTINUE
         self._finish_epoch(stats, evictions_before)
 
-    def sync_to(self, t: float) -> None:
+    def sync_to(self, t: float, comm_s: float = 0.0) -> None:
         """Allreduce barrier (lock-step cluster drive, ``sync="batch"``):
-        account the blocked time into the epoch's stats and jump the node
-        clock to the barrier — the exact float operations
-        ``NodeSimulator.sync_to`` performs, in the same order."""
+        account the blocked time into the epoch's stats, jump the node
+        clock to the barrier, then serve the collective's transfer
+        duration ``comm_s`` — the exact float operations
+        ``NodeSimulator.sync_to`` performs, in the same order
+        (``clock.sleep`` is the same ``+=`` the simulator applies)."""
         wait = t - self.clock.now()
         if wait > 0:
             if self._active_stats is not None:
                 self._active_stats.allreduce_wait_seconds += wait
             self.clock.advance_to(t)
+        if comm_s > 0:
+            if self._active_stats is not None:
+                self._active_stats.allreduce_comm_seconds += comm_s
+            self.clock.sleep(comm_s)
 
     def __len__(self) -> int:
         n = len(self.sampler)

@@ -82,6 +82,8 @@ def drive_interleaved_epoch(
     *,
     sync: str = "epoch",
     batch_barrier: Optional[Callable[[float, Tuple[int, ...]], None]] = None,
+    backup_workers: int = 0,
+    staleness_bound: int = 0,
 ) -> None:
     """THE event-interleaved cluster schedule for one epoch — a single
     implementation shared verbatim by the simulator and the lock-step
@@ -109,6 +111,22 @@ def drive_interleaved_epoch(
         advances exactly one batch: BSP at gradient granularity.  A node
         whose epoch ends (unequal shard) simply stops participating, like
         a DDP join; its peers' remaining barriers exclude it.
+      * **straggler mitigation** (ISSUE 8) relaxes the parking discipline:
+
+          - ``backup_workers=k`` releases a barrier as soon as
+            ``active - k`` running ranks have parked — the slowest ``k``
+            ranks at that round skip the barrier entirely (their partial
+            gradient is dropped; their sample reads remain accounted) and
+            simply keep stepping until they are no longer behind;
+          - ``staleness_bound=s`` lets a rank run up to ``s`` batches
+            ahead of the last released barrier before parking (stale-
+            synchronous parallel); ``s=0`` parks at every batch boundary.
+
+        Both reduce to the plain BSP schedule event-for-event at their
+        zero settings.  A barrier released while stragglers still hold
+        heap events folds only up to ``min(t_bar, earliest heap event)``
+        — folding past a still-running node's next event would break the
+        fold-safety invariant above.
       * finally the BSP epoch barrier: ``barrier(max(now(r)))``
         synchronizes all clocks to the slowest node.
 
@@ -119,27 +137,48 @@ def drive_interleaved_epoch(
         raise ValueError(f"unknown sync {sync!r}; expected 'epoch' or 'batch'")
     if sync == "batch" and batch_barrier is None:
         raise ValueError("sync='batch' needs a batch_barrier callback")
+    if backup_workers < 0 or staleness_bound < 0:
+        raise ValueError("backup_workers and staleness_bound must be >= 0")
+    if (backup_workers or staleness_bound) and sync != "batch":
+        raise ValueError("straggler mitigation requires sync='batch'")
+    if backup_workers >= n_nodes:
+        raise ValueError("backup_workers must leave at least one syncing rank")
     heap = [(now(rank), rank) for rank in range(n_nodes)]
     heapq.heapify(heap)
     parked: List[int] = []  # ranks waiting at the current allreduce barrier
+    done_batches = [0] * n_nodes  # per-rank completed gradient batches
+    barrier_round = 0  # allreduce barriers released so far
+    active = n_nodes  # ranks whose epoch is not yet exhausted
     while heap or parked:
-        if not heap:
-            # Every still-running node reached its batch boundary: allreduce.
+        if parked and (
+            not heap or len(parked) >= max(1, active - backup_workers)
+        ):
+            # Enough running nodes reached a batch boundary: allreduce.
             t_bar = max(now(rank) for rank in parked)
-            fold_all(t_bar)  # rounds finishing during the wait are visible
+            # Rounds finishing during the wait become visible — but never
+            # fold past a straggler's own next event (fold safety).
+            fold_all(t_bar if not heap else min(t_bar, heap[0][0]))
             assert batch_barrier is not None
             batch_barrier(t_bar, tuple(parked))
             for rank in parked:
                 heapq.heappush(heap, (now(rank), rank))
             parked = []
+            barrier_round += 1
             continue
         t, rank = heapq.heappop(heap)
         fold_all(t)
         signal = step(rank)
         if signal == STEP_DONE:
+            active -= 1
             continue
         if sync == "batch" and signal == STEP_BATCH_END:
-            parked.append(rank)
+            done_batches[rank] += 1
+            if done_batches[rank] > barrier_round + staleness_bound:
+                parked.append(rank)
+            else:
+                # Behind (a dropped straggler) or within the staleness
+                # window: skip this barrier and keep running.
+                heapq.heappush(heap, (now(rank), rank))
         else:
             heapq.heappush(heap, (now(rank), rank))
     barrier(max(now(rank) for rank in range(n_nodes)))
@@ -240,6 +279,58 @@ class SubstepAccess:
         self.charge(self.kernel.cpu_overhead_s)
         stats.samples += 1
         stats.data_wait_seconds += self.now() - t0
+
+
+@dataclasses.dataclass
+class BucketedBatchComm:
+    """One gradient batch's bucketed compute/allreduce overlap pipeline
+    (ISSUE 8 tentpole (b)) — the comm analogue of :class:`SubstepAccess`.
+
+    Models the olmax-style bucketed training step: backprop emits the
+    gradient in ``n_buckets`` pieces; each piece's allreduce issues as soon
+    as (a) its backprop span has finished and (b) the single comm channel
+    is free (bucket allreduces serialize on one channel), while the next
+    span keeps computing.  At the end of the last span the node blocks
+    only for the *exposed* tail of the last in-flight allreduce:
+
+        finish_b = max(compute_end_b, finish_{b-1}) + bucket_comm_s
+        exposed  = finish_last - compute_end_last      (>= 0)
+
+    The exposed tail lands in ``allreduce_comm_seconds``; the per-batch
+    barrier then charges **no** comm for overlap specs (it already
+    happened here).  Since ``sum(bucket_comm_s) == allreduce_seconds`` is
+    an exact partition (``CollectiveModel.bucket_seconds``), the exposed
+    tail never exceeds the unbucketed duration — overlap can only hide
+    communication, never add it.
+
+    :meth:`run` is a generator yielding ``STEP_CONTINUE`` at every span
+    boundary, so prefetch rounds and peer activity interleave inside the
+    batch's compute exactly like sub-step access events.  Both projections
+    run this generator verbatim — the simulator charges ``self.t += s``,
+    the lock-step loader ``clock.sleep(s)`` (the identical float op) — so
+    overlap specs stay inside the exact-parity domain.
+    """
+
+    now: Callable[[], float]
+    charge: Callable[[float], None]  # advance this node's clock
+    compute_span_s: float  # per-bucket backprop span (compute/n_buckets)
+    bucket_comm_s: float  # per-bucket allreduce duration (comm/n_buckets)
+    n_buckets: int
+
+    def run(self, stats: EpochStats) -> Iterator[int]:
+        finish = self.now()  # when the comm channel frees up
+        for b in range(self.n_buckets):
+            self.charge(self.compute_span_s)
+            stats.compute_seconds += self.compute_span_s
+            ready = self.now()
+            start = ready if ready > finish else finish
+            finish = start + self.bucket_comm_s
+            if b + 1 < self.n_buckets:
+                yield STEP_CONTINUE
+        exposed = finish - self.now()
+        if exposed > 0:
+            self.charge(exposed)
+            stats.allreduce_comm_seconds += exposed
 
 
 class LockstepPrefetchService:

@@ -53,6 +53,7 @@ from repro.core.bandwidth import (
     DEFAULT_PIPELINE,
     DEFAULT_PROFILE,
     BucketModel,
+    CollectiveModel,
     DiskModel,
     NetworkModel,
     NodeProfile,
@@ -64,6 +65,7 @@ from repro.core.lockstep import (
     STEP_BATCH_END,
     STEP_CONTINUE,
     STEP_DONE,
+    BucketedBatchComm,
     LockstepPrefetchService,
     SubstepAccess,
     drive_interleaved_epoch,
@@ -105,6 +107,24 @@ class SimConfig:
     # barrier after every gradient batch (data-parallel SGD), with per-node
     # waits accounted in EpochStats.allreduce_wait_seconds.
     sync: str = "epoch"
+    # Allreduce cost model (ISSUE 8): gives the per-batch barrier a real
+    # transfer duration (ring/tree over the calibrated NetworkModel,
+    # profile-scaled per rank), accounted in allreduce_comm_seconds.
+    # None = the historical instantaneous barrier, bit-for-bit.
+    collective: Optional[CollectiveModel] = None
+    # Communication/compute overlap: "none" charges the whole allreduce at
+    # the barrier; "buckets" pipelines per-bucket allreduces against the
+    # remaining backprop spans (BucketedBatchComm) so only the exposed
+    # tail is charged.  Needs a collective model.
+    overlap: str = "none"
+    # Straggler mitigation (ISSUE 8): barrier releases once n-k running
+    # ranks parked (the slowest k drop their partial gradient and skip the
+    # barrier)...
+    backup_workers: int = 0
+    # ...or stale-synchronous parallel: a rank may run up to s batches
+    # ahead of the last released barrier before parking.  Mutually
+    # exclusive with backup_workers; both need sync="batch".
+    staleness_bound: int = 0
     # Event granularity: "step" = one event per sample access (probes
     # observe state at the step's start); "substep" = every virtual-time
     # component is its own event (peer probes evaluate at arrival time and
@@ -150,6 +170,30 @@ class SimConfig:
             raise ValueError(f"unknown prefetch_policy {self.prefetch_policy!r}")
         if self.round_sizing not in ("ramp", "cost"):
             raise ValueError(f"unknown round_sizing {self.round_sizing!r}")
+        if self.overlap not in ("none", "buckets"):
+            raise ValueError(f"unknown overlap {self.overlap!r}")
+        if self.collective is not None and self.sync != "batch":
+            raise ValueError(
+                "a collective cost model prices the per-batch allreduce; "
+                "set sync='batch' (the epoch schedule has no such barrier)"
+            )
+        if self.overlap == "buckets" and self.collective is None:
+            raise ValueError(
+                "overlap='buckets' pipelines the allreduce against backprop; "
+                "it needs a CollectiveModel (collective=...)"
+            )
+        if self.backup_workers < 0 or self.staleness_bound < 0:
+            raise ValueError("backup_workers and staleness_bound must be >= 0")
+        if (self.backup_workers or self.staleness_bound) and self.sync != "batch":
+            raise ValueError(
+                "straggler mitigation (backup_workers/staleness_bound) "
+                "relaxes the per-batch barrier; set sync='batch'"
+            )
+        if self.backup_workers and self.staleness_bound:
+            raise ValueError(
+                "backup_workers and staleness_bound are mutually exclusive "
+                "mitigation policies; pick one"
+            )
         if self.eviction == "belady" and (
             self.cache_items is None or self.source == "disk"
         ):
@@ -185,6 +229,14 @@ class SimConfig:
 
     def label(self) -> str:
         sched = "+bsync" if self.sync == "batch" else ""
+        if self.collective is not None:
+            sched += "+comm"
+        if self.overlap == "buckets":
+            sched += "+ovl"
+        if self.backup_workers:
+            sched += f"+backup{self.backup_workers}"
+        if self.staleness_bound:
+            sched += f"+stale{self.staleness_bound}"
         if self.granularity == "substep":
             sched += "+substep"
         if self.source == "disk":
@@ -248,6 +300,27 @@ class NodeSimulator:
         self.pipeline = profile.scale_pipeline(pipeline)
         self.network = profile.scale_network(network)
         self.compute_per_batch_s = profile.batch_compute_s(spec.compute_per_batch_s)
+        # Allreduce cost (ISSUE 8): this rank's full-gradient duration over
+        # its *profile-scaled* network (a straggler's slow NIC slows its
+        # allreduce too).  The lock-step runtime computes the identical
+        # float through the same scaled model.
+        self.allreduce_s = 0.0
+        self._overlap: Optional[BucketedBatchComm] = None
+        if cfg.collective is not None:
+            self.allreduce_s = cfg.collective.allreduce_seconds(
+                self.network, spec.n_nodes
+            )
+            if cfg.overlap == "buckets":
+                self._overlap = BucketedBatchComm(
+                    now=lambda: self.t,
+                    charge=self._charge,
+                    compute_span_s=self.compute_per_batch_s
+                    / cfg.collective.n_buckets,
+                    bucket_comm_s=cfg.collective.bucket_seconds(
+                        self.network, spec.n_nodes
+                    ),
+                    n_buckets=cfg.collective.n_buckets,
+                )
         # THE per-sample cost arithmetic (repro.engine.kernels), shared by
         # this scalar stepper, the sub-step machine, the vector engine and
         # DeliLoader's runtime mirror.  Precomputed from the *scaled*
@@ -545,9 +618,15 @@ class NodeSimulator:
                 self._access(idx, stats)
             self._samples_in_batch += 1
             if self._samples_in_batch == self.spec.batch_size:
-                self.t += self.compute_per_batch_s
-                stats.compute_seconds += self.compute_per_batch_s
                 self._samples_in_batch = 0
+                if self._overlap is not None:
+                    # Bucketed compute/allreduce pipeline: the shared
+                    # generator charges the spans and the exposed comm tail
+                    # (same code the lock-step loader runs).
+                    yield from self._overlap.run(stats)
+                else:
+                    self.t += self.compute_per_batch_s
+                    stats.compute_seconds += self.compute_per_batch_s
                 yield STEP_BATCH_END
             else:
                 yield STEP_CONTINUE
@@ -560,16 +639,22 @@ class NodeSimulator:
         assert self._events is not None
         return next(self._events, STEP_DONE)
 
-    def sync_to(self, t: float) -> None:
-        """Allreduce barrier: account the blocked time and jump to the
-        barrier's virtual time (never backwards).  Called by the cluster
-        scheduler for every parked node under ``sync="batch"``, and for
-        the epoch barrier of that schedule."""
+    def sync_to(self, t: float, comm_s: float = 0.0) -> None:
+        """Allreduce barrier: account the blocked time (skew) and jump to
+        the barrier's virtual time (never backwards), then serve the
+        collective's transfer duration ``comm_s`` — every participant
+        leaves the barrier together at ``t + comm_s``.  Called by the
+        cluster scheduler for every parked node under ``sync="batch"``,
+        and (wait-only) for the epoch barrier of that schedule."""
         wait = t - self.t
         if wait > 0:
             if self._stats is not None:
                 self._stats.allreduce_wait_seconds += wait
             self.t = t
+        if comm_s > 0:
+            if self._stats is not None:
+                self._stats.allreduce_comm_seconds += comm_s
+            self.t += comm_s
 
     def finish_epoch(self) -> EpochStats:
         assert self._stats is not None
@@ -761,8 +846,17 @@ def simulate_cluster(
                         n.t = t  # PR 3 epoch barrier (no accounting)
 
             def _batch_barrier(t: float, ranks: Tuple[int, ...]) -> None:
+                # With a collective cost model and no overlap, the barrier
+                # itself carries the transfer: its duration is the slowest
+                # participant's full-gradient allreduce (a collective runs
+                # at the pace of its slowest member).  Overlap specs charge
+                # the exposed comm inside the batch (BucketedBatchComm), so
+                # their barrier is wait-only.
+                comm = 0.0
+                if cfg.collective is not None and cfg.overlap == "none":
+                    comm = max(nodes[r].allreduce_s for r in ranks)
                 for r in ranks:
-                    nodes[r].sync_to(t)
+                    nodes[r].sync_to(t, comm)
 
             drive_interleaved_epoch(
                 len(nodes),
@@ -772,6 +866,8 @@ def simulate_cluster(
                 barrier=_barrier,
                 sync=cfg.sync,
                 batch_barrier=_batch_barrier if cfg.sync == "batch" else None,
+                backup_workers=cfg.backup_workers,
+                staleness_bound=cfg.staleness_bound,
             )
         else:
             for node in nodes:

@@ -105,6 +105,11 @@ class EpochStats:
     # the per-batch BSP schedule (``sync="batch"``) accounts it; the legacy
     # epoch-barrier schedule leaves it 0.0 (ISSUE 4).
     allreduce_wait_seconds: float = 0.0
+    # Time spent *transferring* gradient bytes in the allreduce itself
+    # (``CollectiveModel`` duration, ISSUE 8).  Zero unless a collective
+    # cost model is configured; with ``overlap="buckets"`` only the
+    # non-hidden (exposed) fraction lands here.
+    allreduce_comm_seconds: float = 0.0
     evictions: int = 0
     tier_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -147,12 +152,15 @@ class EpochStats:
     @property
     def wall_clock_seconds(self) -> float:
         """The node's busy+blocked time inside the epoch: data-wait +
-        compute + allreduce waits.  Under ``sync="batch"`` this is the
-        node's barrier-to-barrier epoch duration (fig11's metric)."""
+        compute + allreduce waits + allreduce transfer.  Under
+        ``sync="batch"`` this is the node's barrier-to-barrier epoch
+        duration (fig11's metric).  With zero collective cost the comm
+        term is 0.0 and this reproduces the pre-ISSUE-8 total exactly."""
         return (
             self.data_wait_seconds
             + self.compute_seconds
             + self.allreduce_wait_seconds
+            + self.allreduce_comm_seconds
         )
 
     @property

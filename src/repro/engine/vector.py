@@ -77,11 +77,20 @@ class VectorNodeEngine(NodeSimulator):
     ``DemandKernel``, ``LockstepPrefetchService``, planner construction,
     ``sync_to``/``finish_epoch``/``fold_inserts_until``.  ``begin_epoch``
     swaps the scalar event generator for :meth:`_vector_events` when the
-    epoch is batchable (no peer registry)."""
+    epoch is batchable (no peer registry, no bucketed overlap).
+
+    Allreduce cost specs (ISSUE 8) vectorize at ``overlap="none"``: the
+    barrier's transfer is charged by ``sync_to`` *between* spans (spans
+    are cut at gradient boundaries under ``sync="batch"``), so segment
+    arithmetic never sees it.  ``overlap="buckets"`` interleaves comm
+    charges *inside* the batch's compute (a stateful per-bucket pipeline
+    the span chain cannot express), so those epochs keep inherited scalar
+    stepping — the same loud-fallback-over-silent-drift policy as the
+    peer registry."""
 
     def begin_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> None:
         super().begin_epoch(epoch, order, node=node)
-        if self.registry is None:
+        if self.registry is None and self._overlap is None:
             # The scalar generator installed by super() is lazy and
             # side-effect-free until first resumed — safe to discard.
             self._events = self._vector_events(list(order))

@@ -12,8 +12,10 @@ agree **exactly**:
     aggregated over the run;
   * total Class A (listing) and Class B (GET) requests billed;
   * per-(epoch, node) sample counts, **data-wait seconds** and — since the
-    per-batch allreduce schedule (ISSUE 4) — **allreduce-wait seconds**
-    (bit-equal floats, not approximately-equal ones).
+    per-batch allreduce schedule (ISSUE 4) — **allreduce-wait seconds**,
+    plus (ISSUE 8) **allreduce-comm seconds** (the collective's transfer
+    time, bucketed-overlap exposed tails included) — bit-equal floats, not
+    approximately-equal ones.
 
 Since ISSUE 4 the parity domain additionally covers ``sync="batch"``
 (per-batch allreduce barriers), ``granularity="substep"`` (per-component
@@ -82,9 +84,11 @@ class ParityReport:
     runtime_class_a: int
     sim_class_b: int
     runtime_class_b: int
-    # (epoch, node, samples, data_wait_s, allreduce_wait_s) per node-epoch.
-    sim_samples: List[Tuple[int, int, int, float, float]]
-    runtime_samples: List[Tuple[int, int, int, float, float]]
+    # (epoch, node, samples, data_wait_s, allreduce_wait_s,
+    #  allreduce_comm_s) per node-epoch.  Comm appended as the 6th element
+    # (ISSUE 8) so existing row[4] consumers keep reading the wait.
+    sim_samples: List[Tuple[int, int, int, float, float, float]]
+    runtime_samples: List[Tuple[int, int, int, float, float, float]]
 
     @property
     def exact(self) -> bool:
@@ -129,11 +133,25 @@ def run_parity(spec: DataPlaneSpec, epochs: int = 2) -> ParityReport:
         sim_class_b=sim_store.class_b_requests,
         runtime_class_b=run_store.class_b_requests,
         sim_samples=[
-            (s.epoch, s.node, s.samples, s.data_wait_seconds, s.allreduce_wait_seconds)
+            (
+                s.epoch,
+                s.node,
+                s.samples,
+                s.data_wait_seconds,
+                s.allreduce_wait_seconds,
+                s.allreduce_comm_seconds,
+            )
             for s in sim_stats
         ],
         runtime_samples=[
-            (s.epoch, s.node, s.samples, s.data_wait_seconds, s.allreduce_wait_seconds)
+            (
+                s.epoch,
+                s.node,
+                s.samples,
+                s.data_wait_seconds,
+                s.allreduce_wait_seconds,
+                s.allreduce_comm_seconds,
+            )
             for s in run_stats
         ],
     )

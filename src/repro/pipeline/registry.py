@@ -32,7 +32,11 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List
 
-from repro.core.bandwidth import straggler_profiles
+from repro.core.bandwidth import (
+    CollectiveModel,
+    mnist_cnn_gradient_bytes,
+    straggler_profiles,
+)
 from repro.core.policy import PrefetchConfig
 from repro.core.sampler import (
     DistributedPartitionSampler,
@@ -364,5 +368,102 @@ def _straggler(
         nodes=straggler_profiles(
             workload.n_nodes, slow_ranks=slow_ranks, compute=compute, bandwidth=bandwidth
         ),
+        **kw,
+    )
+
+
+def _default_collective(kw: dict, gradient_bytes: int = 0) -> CollectiveModel:
+    """Pop/auto-build the collective for the ISSUE 8 conditions: callers may
+    pass ``collective=CollectiveModel(...)`` or just ``gradient_bytes=...``;
+    the default is the paper's MNIST CNN gradient over the ring algorithm."""
+    collective = kw.pop("collective", None)
+    if collective is None:
+        collective = CollectiveModel(
+            gradient_bytes=kw.pop("gradient_bytes", gradient_bytes)
+            or mnist_cnn_gradient_bytes()
+        )
+    else:
+        kw.pop("gradient_bytes", None)
+    return collective
+
+
+@register_condition("bsync-cost")
+def _bsync_cost(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """Per-batch allreduce barriers *with a priced collective* (ISSUE 8):
+    the barrier carries the ring-allreduce transfer duration of the
+    gradient (default: the paper's MNIST CNN, ~1.8 MB fp32), split into
+    ``allreduce_wait_seconds`` (skew) + ``allreduce_comm_seconds``
+    (transfer)."""
+    collective = _default_collective(kw)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        sync="batch",
+        collective=collective,
+        **kw,
+    )
+
+
+@register_condition("overlap")
+def _overlap(workload: WorkloadSpec, cache_items: int = -1, **kw) -> DataPlaneSpec:
+    """``bsync-cost`` + gradient-bucket communication/compute overlap: the
+    allreduce issues per-bucket, pipelined against the remaining backprop
+    spans, so only the exposed comm tail is charged
+    (``benchmarks/fig15_comm_overlap.py`` measures the hidden fraction)."""
+    collective = _default_collective(kw)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        sync="batch",
+        collective=collective,
+        overlap="buckets",
+        **kw,
+    )
+
+
+@register_condition("backup-1")
+def _backup_1(
+    workload: WorkloadSpec,
+    cache_items: int = -1,
+    backup_workers: int = 1,
+    compute: float = 2.0,
+    bandwidth: float = 2.0,
+    slow_ranks: tuple = (0,),
+    **kw,
+) -> DataPlaneSpec:
+    """Backup-worker mitigation over the canonical straggler cluster: each
+    priced barrier releases once ``n - k`` ranks arrive; the slowest ``k``
+    drop their partial gradient and skip the wait entirely."""
+    collective = _default_collective(kw)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        sync="batch",
+        collective=collective,
+        backup_workers=backup_workers,
+        nodes=straggler_profiles(
+            workload.n_nodes, slow_ranks=slow_ranks, compute=compute, bandwidth=bandwidth
+        ),
+        **kw,
+    )
+
+
+@register_condition("stale-2")
+def _stale_2(
+    workload: WorkloadSpec,
+    cache_items: int = -1,
+    staleness_bound: int = 2,
+    **kw,
+) -> DataPlaneSpec:
+    """Bounded-staleness mitigation: a rank may run up to ``s`` gradient
+    batches ahead of the last released barrier before parking (stale-
+    synchronous parallel on the priced schedule)."""
+    collective = _default_collective(kw)
+    return DataPlaneSpec(
+        workload=workload,
+        cache_items=cache_items,
+        sync="batch",
+        collective=collective,
+        staleness_bound=staleness_bound,
         **kw,
     )

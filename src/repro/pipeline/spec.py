@@ -43,6 +43,7 @@ from repro.core.bandwidth import (
     DEFAULT_PIPELINE,
     DEFAULT_PROFILE,
     BucketModel,
+    CollectiveModel,
     DiskModel,
     NetworkModel,
     NodeProfile,
@@ -54,6 +55,7 @@ from repro.core.dataset import CachingDataset
 from repro.core.loader import DeliLoader
 from repro.core.lockstep import (
     STEP_DONE,
+    BucketedBatchComm,
     LockstepPrefetchService,
     SubstepAccess,
     drive_interleaved_epoch,
@@ -170,6 +172,22 @@ class DataPlaneSpec:
     replication_aware_eviction: bool = False
     interleaved: bool = True
     sync: str = "epoch"  # "epoch" | "batch" (per-batch allreduce barriers)
+    # Allreduce cost model (ISSUE 8): a CollectiveModel prices the
+    # per-batch barrier's gradient transfer (ring/tree over the calibrated
+    # NetworkModel, profile-scaled per rank) into
+    # EpochStats.allreduce_comm_seconds.  None = instantaneous barrier.
+    collective: Optional[CollectiveModel] = None
+    # "none" charges the whole allreduce at the barrier; "buckets"
+    # pipelines per-bucket allreduces against the remaining backprop spans
+    # (the shared BucketedBatchComm generator) so only the exposed tail is
+    # charged.  Needs `collective`.
+    overlap: str = "none"  # "none" | "buckets"
+    # Straggler mitigation (ISSUE 8): release barriers after n-k ranks
+    # (slowest k drop their partial gradient), or let ranks run <= s
+    # batches ahead (stale-synchronous).  Mutually exclusive; both need
+    # sync="batch".  Validated once in SimConfig.__post_init__.
+    backup_workers: int = 0
+    staleness_bound: int = 0
     granularity: str = "step"  # "step" | "substep" (event decomposition)
     nodes: Optional[Tuple[NodeProfile, ...]] = None  # per-rank straggler profiles
     eviction: str = "fifo"  # "fifo" | "belady" (clairvoyant, ISSUE 5)
@@ -260,6 +278,10 @@ class DataPlaneSpec:
             peer_cache=self.peer_cache,
             replication_aware_eviction=self.replication_aware_eviction,
             sync=self.sync,
+            collective=self.collective,
+            overlap=self.overlap,
+            backup_workers=self.backup_workers,
+            staleness_bound=self.staleness_bound,
             granularity=self.granularity,
             eviction=self.eviction,
             prefetch_policy=self.prefetch_policy,
@@ -284,6 +306,10 @@ class DataPlaneSpec:
             peer_cache=cfg.peer_cache,
             replication_aware_eviction=cfg.replication_aware_eviction,
             sync=cfg.sync,
+            collective=cfg.collective,
+            overlap=cfg.overlap,
+            backup_workers=cfg.backup_workers,
+            staleness_bound=cfg.staleness_bound,
             granularity=cfg.granularity,
             eviction=cfg.eviction,
             prefetch_policy=cfg.prefetch_policy,
@@ -472,6 +498,12 @@ class RuntimeCluster:
         self.pipelines: List[PipelineCostModel] = []
         self.computes: List[float] = []
         self.substeps: List[Optional[SubstepAccess]] = []
+        # Allreduce cost (ISSUE 8): per-rank full-gradient durations over
+        # the profile-scaled networks, and the per-rank bucketed overlap
+        # pipelines — the same construction NodeSimulator.__init__ performs
+        # from its identically-scaled models.
+        self.allreduces: List[float] = []
+        self.overlaps: List[Optional[BucketedBatchComm]] = []
         if spec.source == "disk":
             # Materialize the dataset once; every node reads the same files
             # (the paper's disk baseline: data staged on each VM's disk).
@@ -485,6 +517,25 @@ class RuntimeCluster:
             node_pipeline = prof.scale_pipeline(spec.pipeline_model)
             self.pipelines.append(node_pipeline)
             self.computes.append(prof.batch_compute_s(w.compute_per_batch_s))
+            allreduce_s = 0.0
+            overlap_pipe: Optional[BucketedBatchComm] = None
+            if spec.collective is not None:
+                allreduce_s = spec.collective.allreduce_seconds(
+                    node_network, w.n_nodes
+                )
+                if spec.overlap == "buckets":
+                    overlap_pipe = BucketedBatchComm(
+                        now=node_clock.now,
+                        charge=node_clock.sleep,
+                        compute_span_s=self.computes[rank]
+                        / spec.collective.n_buckets,
+                        bucket_comm_s=spec.collective.bucket_seconds(
+                            node_network, w.n_nodes
+                        ),
+                        n_buckets=spec.collective.n_buckets,
+                    )
+            self.allreduces.append(allreduce_s)
+            self.overlaps.append(overlap_pipe)
             bucket: Optional[SimulatedBucketStore] = None
             if spec.source == "disk":
                 disk_store = FileSystemStore(
@@ -727,6 +778,7 @@ class RuntimeCluster:
                         pipeline_model=self.pipelines[rank],
                         compute_per_batch_s=self.computes[rank],
                         substep=self.substeps[rank],
+                        overlap=self.overlaps[rank],
                     )
                 )
             if self.spec.interleaved:
@@ -749,8 +801,18 @@ class RuntimeCluster:
                             c.advance_to(t)
 
                 def _batch_barrier(t: float, ranks: Tuple[int, ...]) -> None:
+                    # Mirror of simulate_cluster's barrier: with a
+                    # collective model and no overlap, the barrier carries
+                    # the slowest participant's transfer duration; overlap
+                    # specs charged their exposed comm inside the batch.
+                    comm = 0.0
+                    if (
+                        self.spec.collective is not None
+                        and self.spec.overlap == "none"
+                    ):
+                        comm = max(self.allreduces[r] for r in ranks)
                     for r in ranks:
-                        self.loaders[r].sync_to(t)
+                        self.loaders[r].sync_to(t, comm)
 
                 drive_interleaved_epoch(
                     w.n_nodes,
@@ -762,6 +824,8 @@ class RuntimeCluster:
                     batch_barrier=(
                         _batch_barrier if self.spec.sync == "batch" else None
                     ),
+                    backup_workers=self.spec.backup_workers,
+                    staleness_bound=self.spec.staleness_bound,
                 )
             else:
                 for stepper in steppers:

@@ -16,9 +16,11 @@ except ImportError:  # offline container
 
 from repro.core import (
     MNIST,
+    CollectiveModel,
     NodeProfile,
     PrefetchConfig,
     SimConfig,
+    mnist_cnn_gradient_bytes,
     simulate_cluster,
     straggler_profiles,
 )
@@ -255,6 +257,23 @@ def test_substep_equals_step_for_non_interacting_nodes_outcomes():
             dict(sync="batch", granularity="substep", peer_cache=True, straggler=True),
             True,
         ),
+        # ISSUE 8 knobs folded into the same sweep: collective cost,
+        # bucket overlap, and mitigation ride the identical parity bar.
+        (
+            "batch-comm-straggler-pf",
+            dict(sync="batch", comm=True, peer_cache=True, straggler=True),
+            True,
+        ),
+        (
+            "substep-comm-ovl-pf",
+            dict(sync="batch", granularity="substep", comm=True, overlap="buckets", peer_cache=True),
+            True,
+        ),
+        (
+            "batch-comm-backup-straggler",
+            dict(sync="batch", comm=True, backup_workers=1, straggler=True),
+            False,
+        ),
     ],
 )
 def test_sim_runtime_parity_exact_batch_and_straggler(tag, overrides, prefetch):
@@ -268,6 +287,10 @@ def test_sim_runtime_parity_exact_batch_and_straggler(tag, overrides, prefetch):
         overrides["nodes"] = straggler_profiles(
             w.n_nodes, slow_ranks=(0,), compute=2.0, bandwidth=2.0
         )
+    if overrides.pop("comm", False):
+        overrides["collective"] = CollectiveModel(
+            gradient_bytes=mnist_cnn_gradient_bytes()
+        )
     spec = DataPlaneSpec(
         workload=w,
         cache_items=300,
@@ -277,6 +300,8 @@ def test_sim_runtime_parity_exact_batch_and_straggler(tag, overrides, prefetch):
     report = assert_parity(spec, epochs=2)
     if spec.sync == "batch":
         assert sum(row[4] for row in report.sim_samples) > 0  # allreduce seen
+    if spec.collective is not None and spec.backup_workers == 0:
+        assert sum(row[5] for row in report.sim_samples) > 0  # comm charged
     if prefetch:
         assert report.sim_tiers.get("ram", 0) > 0
 

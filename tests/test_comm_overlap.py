@@ -1,0 +1,498 @@
+"""ISSUE 8 tentpole: the allreduce as a first-class modeled operation —
+``CollectiveModel`` cost closed forms, gradient-bucket overlap
+(``overlap="buckets"``), straggler mitigation (``backup_workers`` /
+``staleness_bound``) — with closed-form pins, exact sim/runtime parity,
+and seed-swept invariants."""
+import dataclasses
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline container
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import (
+    DEFAULT_NETWORK,
+    MNIST,
+    CollectiveModel,
+    NodeProfile,
+    PrefetchConfig,
+    SimConfig,
+    mnist_cnn_gradient_bytes,
+    straggler_profiles,
+)
+from repro.core.types import aggregate_tier_hits
+from repro.core.workloads import WorkloadSpec
+from repro.pipeline import DataPlaneSpec, assert_parity, condition
+
+GRAD = mnist_cnn_gradient_bytes()
+
+
+def _workload(n_samples=600, batch=25, n_nodes=3, compute_s=0.2):
+    """Batch-divisible shape (see test_batch_sync): every node runs the
+    same number of gradient batches."""
+    assert (n_samples // n_nodes) % batch == 0
+    return WorkloadSpec(
+        name="comm",
+        n_samples=n_samples,
+        sample_bytes=784,
+        batch_size=batch,
+        compute_per_epoch_s=compute_s,
+        n_nodes=n_nodes,
+    )
+
+
+def _spec(**overrides):
+    w = overrides.pop("workload", _workload())
+    kw = dict(workload=w, cache_items=-1, sync="batch")
+    kw.update(overrides)
+    return DataPlaneSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form pins (satellite 3): durations asserted exactly — the model
+# IS the arithmetic, so the test states the arithmetic.
+# ---------------------------------------------------------------------------
+def test_mnist_cnn_gradient_bytes_pin():
+    # conv1 32*(1*25+1) + conv2 64*(32*25+1) + fc1 (3136*128+128)
+    # + fc2 (128*10+10) parameters, fp32.
+    params = 832 + 51264 + 401536 + 1290
+    assert GRAD == 4 * params == 1_819_688
+
+
+def test_ring_allreduce_closed_form_exact():
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    for n in (2, 3, 4, 8):
+        expected = 2 * (n - 1) * (
+            DEFAULT_NETWORK.rtt_s + (GRAD / n) / DEFAULT_NETWORK.bw
+        )
+        assert cm.allreduce_seconds(DEFAULT_NETWORK, n) == expected
+
+
+def test_tree_allreduce_closed_form_exact():
+    cm = CollectiveModel(gradient_bytes=GRAD, algorithm="tree")
+    for n in (2, 3, 4, 8):
+        expected = 2 * math.ceil(math.log2(n)) * (
+            DEFAULT_NETWORK.rtt_s + GRAD / DEFAULT_NETWORK.bw
+        )
+        assert cm.allreduce_seconds(DEFAULT_NETWORK, n) == expected
+
+
+def test_allreduce_degenerate_cases_are_free():
+    assert CollectiveModel(gradient_bytes=0).allreduce_seconds(DEFAULT_NETWORK, 8) == 0.0
+    assert CollectiveModel(gradient_bytes=GRAD).allreduce_seconds(DEFAULT_NETWORK, 1) == 0.0
+
+
+def test_both_algorithms_dominate_the_bandwidth_lower_bound():
+    """Every modeled duration >= the bandwidth-optimal closed form
+    2(n-1)/n * bytes / bw (each rank must move that much gradient)."""
+    for algorithm in ("ring", "tree"):
+        for n in (2, 3, 4, 7, 16):
+            cm = CollectiveModel(gradient_bytes=GRAD, algorithm=algorithm)
+            assert cm.allreduce_seconds(DEFAULT_NETWORK, n) >= cm.ring_lower_bound_seconds(
+                DEFAULT_NETWORK, n
+            )
+
+
+def test_bucket_seconds_partition_allreduce_exactly():
+    """Buckets partition the full duration exactly (latency amortized with
+    the payload): B * bucket_seconds == allreduce_seconds up to float
+    division/multiplication round-trip, and is the literal quotient."""
+    for n_buckets in (1, 2, 4, 8):
+        cm = CollectiveModel(gradient_bytes=GRAD, n_buckets=n_buckets)
+        full = cm.allreduce_seconds(DEFAULT_NETWORK, 4)
+        assert cm.bucket_seconds(DEFAULT_NETWORK, 4) == full / n_buckets
+
+
+def test_lm_config_gradient_bytes_pin():
+    """Table-scale gradients come from the real model configs (lazy jax
+    import): 4 bytes per parameter, exactly."""
+    pytest.importorskip("jax")
+    from repro.core import arch_gradient_bytes
+    from repro import configs
+
+    assert arch_gradient_bytes("mamba2-130m") == 4 * configs.get("mamba2-130m").param_count()
+
+
+def test_node_profile_identity_keeps_allreduce_bitwise():
+    """NodeProfile(1.0, 1.0) rebuilds a bit-identical network, so the
+    per-rank allreduce duration is the same float — homogeneous clusters
+    stay at their unscaled values."""
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    scaled = NodeProfile().scale_network(DEFAULT_NETWORK)
+    assert cm.allreduce_seconds(scaled, 3) == cm.allreduce_seconds(DEFAULT_NETWORK, 3)
+    slow = NodeProfile(bandwidth=2.0).scale_network(DEFAULT_NETWORK)
+    assert cm.allreduce_seconds(slow, 3) > cm.allreduce_seconds(DEFAULT_NETWORK, 3)
+
+
+# ---------------------------------------------------------------------------
+# Validation: every new knob refuses loudly when misused.
+# ---------------------------------------------------------------------------
+def test_collective_model_validation():
+    with pytest.raises(ValueError):
+        CollectiveModel(gradient_bytes=-1)
+    with pytest.raises(ValueError):
+        CollectiveModel(gradient_bytes=GRAD, algorithm="butterfly")
+    with pytest.raises(ValueError):
+        CollectiveModel(gradient_bytes=GRAD, n_buckets=0)
+
+
+def test_spec_knob_validation():
+    w = _workload()
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    # collective and overlap require the per-batch schedule.
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=-1, collective=cm)
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=-1, sync="batch", overlap="buckets")
+    with pytest.raises(ValueError):
+        _spec(collective=cm, overlap="pipelined")
+    # mitigation requires batch sync and the knobs are mutually exclusive.
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=-1, backup_workers=1)
+    with pytest.raises(ValueError):
+        DataPlaneSpec(workload=w, cache_items=-1, staleness_bound=1)
+    with pytest.raises(ValueError):
+        _spec(backup_workers=-1)
+    with pytest.raises(ValueError):
+        _spec(staleness_bound=-1)
+    with pytest.raises(ValueError):
+        _spec(backup_workers=1, staleness_bound=1)
+    # backup_workers must leave at least one syncing rank.
+    with pytest.raises(ValueError):
+        _spec(backup_workers=w.n_nodes).build_sim().run(epochs=1)
+    with pytest.raises(ValueError):
+        SimConfig(cache_items=-1, sync="batch", overlap="buckets")
+
+
+# ---------------------------------------------------------------------------
+# Satellite 4 (bugfix pin): blocked time now splits into wait + comm, and
+# the zero-cost collective reproduces the historical totals bit-for-bit.
+# ---------------------------------------------------------------------------
+def test_zero_cost_collective_is_bit_identical_to_plain_batch_sync():
+    """CollectiveModel(gradient_bytes=0) charges nothing, so wait + comm
+    must reproduce the pre-ISSUE-8 wall exactly — comm identically zero,
+    every other stat bit-equal.  This is the pin that keeps fig11's
+    straggler-tax claims meaningful after the accounting split."""
+    w = _workload()
+    nodes = straggler_profiles(w.n_nodes, slow_ranks=(2,), compute=2.0, bandwidth=2.0)
+    plain = _spec(workload=w, nodes=nodes)
+    free = dataclasses.replace(plain, collective=CollectiveModel(gradient_bytes=0))
+    p_stats, p_store = plain.build_sim().run(epochs=2)
+    f_stats, f_store = free.build_sim().run(epochs=2)
+    assert [dataclasses.asdict(s) for s in p_stats] == [
+        dataclasses.asdict(s) for s in f_stats
+    ]
+    assert p_store == f_store
+    assert all(s.allreduce_comm_seconds == 0.0 for s in f_stats)
+
+
+def test_costed_barrier_splits_wait_from_comm():
+    """With a real gradient, every rank pays the same transfer time per
+    barrier (the collective runs at the slowest member's pace) on top of
+    whatever skew wait it had; comm = batches * allreduce_seconds exactly."""
+    w = _workload()
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    plain = _spec(workload=w)
+    cost = dataclasses.replace(plain, collective=cm)
+    p_stats, _ = plain.build_sim().run(epochs=1)
+    c_stats, _ = cost.build_sim().run(epochs=1)
+    per_batch = cm.allreduce_seconds(DEFAULT_NETWORK, w.n_nodes)
+    batches = w.partition_size // w.batch_size
+    for p, c in zip(p_stats, c_stats):
+        assert c.allreduce_wait_seconds == p.allreduce_wait_seconds
+        assert c.allreduce_comm_seconds == pytest.approx(batches * per_batch, rel=1e-12)
+        assert c.wall_clock_seconds > p.wall_clock_seconds
+
+
+def test_overlap_hides_comm_behind_backprop():
+    """Bucketed overlap: only the exposed tail of the last bucket's
+    allreduce is charged, so comm drops versus overlap="none" while Class
+    A/B and tier outcomes stay identical (the data plane cannot tell)."""
+    w = _workload()
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    none = _spec(workload=w, collective=cm)
+    ovl = dataclasses.replace(none, overlap="buckets")
+    n_stats, n_store = none.build_sim().run(epochs=1)
+    o_stats, o_store = ovl.build_sim().run(epochs=1)
+    assert aggregate_tier_hits(n_stats) == aggregate_tier_hits(o_stats)
+    assert (n_store.class_a_requests, n_store.class_b_requests) == (
+        o_store.class_a_requests,
+        o_store.class_b_requests,
+    )
+    for n, o in zip(n_stats, o_stats):
+        assert o.allreduce_comm_seconds < n.allreduce_comm_seconds
+        assert o.wall_clock_seconds <= n.wall_clock_seconds * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Mitigation semantics.
+# ---------------------------------------------------------------------------
+def test_backup_workers_release_barrier_without_the_straggler():
+    """backup_workers=1 on a straggler cluster: barriers release without
+    the slow rank, whose gradient is dropped — it pays no collective comm
+    at all, the surviving collective runs at the fast ranks' (unscaled)
+    pace, the epoch wall shrinks, and every sample is still accounted
+    exactly once."""
+    w = _workload(n_nodes=4, n_samples=800)
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    nodes = straggler_profiles(w.n_nodes, slow_ranks=(0,), compute=3.0, bandwidth=3.0)
+    plain = _spec(workload=w, nodes=nodes, collective=cm)
+    backup = dataclasses.replace(plain, backup_workers=1)
+    p_stats, _ = plain.build_sim().run(epochs=1)
+    b_stats, _ = backup.build_sim().run(epochs=1)
+    straggler = [s for s in b_stats if s.node == 0][0]
+    assert straggler.allreduce_comm_seconds == 0.0  # dropped from collectives
+    fast = [s for s in b_stats if s.node != 0]
+    fast_plain = [s for s in p_stats if s.node != 0]
+    assert sum(s.allreduce_comm_seconds for s in fast) < sum(
+        s.allreduce_comm_seconds for s in fast_plain
+    )
+    assert max(s.wall_clock_seconds for s in b_stats) < max(
+        s.wall_clock_seconds for s in p_stats
+    )
+    assert sum(s.samples for s in b_stats) == w.n_samples
+
+
+def test_staleness_bound_elides_barriers():
+    """staleness_bound=s: a rank may run up to s batches past the barrier
+    round before parking, so the first s barriers of the epoch never fire
+    — exactly s fewer collectives per epoch (comm = (batches - s) * the
+    closed form), a strictly smaller wall, and the run-ahead stays bounded
+    (wall still >= every node's own busy time)."""
+    w = _workload()
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    nodes = straggler_profiles(w.n_nodes, slow_ranks=(0,), compute=2.0, bandwidth=2.0)
+    plain = _spec(workload=w, nodes=nodes, collective=cm)
+    stale = dataclasses.replace(plain, staleness_bound=2)
+    p_stats, _ = plain.build_sim().run(epochs=1)
+    s_stats, _ = stale.build_sim().run(epochs=1)
+    batches = w.partition_size // w.batch_size
+    for p_row, s_row in zip(p_stats, s_stats):
+        assert s_row.allreduce_comm_seconds == pytest.approx(
+            p_row.allreduce_comm_seconds * (batches - 2) / batches, rel=1e-9
+        )
+        assert s_row.wall_clock_seconds < p_row.wall_clock_seconds
+        busy = s_row.data_wait_seconds + s_row.compute_seconds
+        assert s_row.wall_clock_seconds >= busy * (1 - 1e-9)
+    assert sum(s.samples for s in s_stats) == w.n_samples
+
+
+def test_mitigation_zero_is_plain_batch_sync_event_for_event():
+    """backup_workers=0 and staleness_bound=0 ARE batch sync: the driver
+    reduces to the historical release condition, so stats and store are
+    bit-identical, not merely close."""
+    w = _workload()
+    nodes = straggler_profiles(w.n_nodes, slow_ranks=(1,), compute=2.0, bandwidth=1.5)
+    plain = _spec(workload=w, nodes=nodes)
+    p_stats, p_store = plain.build_sim().run(epochs=2)
+    for knob in (dict(backup_workers=0), dict(staleness_bound=0)):
+        k_stats, k_store = dataclasses.replace(plain, **knob).build_sim().run(epochs=2)
+        assert [dataclasses.asdict(s) for s in p_stats] == [
+            dataclasses.asdict(s) for s in k_stats
+        ]
+        assert p_store == k_store
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: the parity matrix — {overlap x mitigation} x {substep,
+# straggler} x {oracle, cluster-oracle} x engines, exact == including the
+# new comm column (row[5]).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "tag,overrides,prefetch",
+    [
+        ("comm-cache", dict(), False),
+        ("comm-straggler", dict(straggler=True), False),
+        ("ovl-cache", dict(overlap="buckets"), False),
+        ("ovl-substep-peer-pf", dict(overlap="buckets", granularity="substep", peer_cache=True), True),
+        ("ovl-straggler-pf", dict(overlap="buckets", straggler=True, peer_cache=True), True),
+        ("backup-straggler", dict(backup_workers=1, straggler=True), False),
+        ("backup-straggler-pf", dict(backup_workers=1, straggler=True, peer_cache=True), True),
+        # Staleness rows need >s gradient batches per epoch for the bound
+        # to bind (MNIST.scaled(0.02) has one), hence the bigger slice.
+        ("stale-cache", dict(staleness_bound=2, big=True), False),
+        ("stale-straggler-pf", dict(staleness_bound=2, big=True, straggler=True, peer_cache=True), True),
+        ("ovl-backup-straggler", dict(overlap="buckets", backup_workers=1, straggler=True), False),
+        ("tree-substep", dict(algorithm="tree", granularity="substep"), False),
+    ],
+)
+def test_sim_runtime_parity_exact_comm_overlap(tag, overrides, prefetch):
+    """ISSUE 8 acceptance: assert_parity (exact ==; per-tier hits, Class
+    A+B, data-wait, allreduce wait AND comm floats; no tolerances) covers
+    the collective-cost, bucket-overlap and mitigation knobs composed with
+    sub-step granularity, stragglers and prefetch."""
+    overrides = dict(overrides)
+    w = MNIST.scaled(0.05 if overrides.pop("big", False) else 0.02)
+    if overrides.pop("straggler", False):
+        overrides["nodes"] = straggler_profiles(
+            w.n_nodes, slow_ranks=(0,), compute=2.0, bandwidth=2.0
+        )
+    cm = CollectiveModel(
+        gradient_bytes=GRAD, algorithm=overrides.pop("algorithm", "ring")
+    )
+    spec = DataPlaneSpec(
+        workload=w,
+        cache_items=300,
+        sync="batch",
+        collective=cm,
+        prefetch=PrefetchConfig.fifty_fifty(300) if prefetch else None,
+        **overrides,
+    )
+    report = assert_parity(spec, epochs=2)
+    assert sum(row[5] for row in report.sim_samples) > 0  # comm modeled
+    if prefetch:
+        assert report.sim_tiers.get("ram", 0) > 0
+
+
+@pytest.mark.parametrize("name", ["oracle", "cluster-oracle"])
+@pytest.mark.parametrize(
+    "knobs",
+    [
+        dict(overlap="buckets"),
+        dict(backup_workers=1, nodes=straggler_profiles(3, (0,), 2.0, 2.0)),
+        dict(staleness_bound=2, granularity="substep"),
+    ],
+    ids=["overlap", "backup", "stale-substep"],
+)
+def test_oracle_parity_exact_with_comm_knobs(name, knobs):
+    """The clairvoyant data planes stay exact under every new knob: the
+    collective schedule perturbs clock trajectories, and the oracle's
+    cursor/planner machinery is shared, so parity must not budge."""
+    # Staleness needs > s gradient batches per epoch to bind.
+    scale = 0.05 if "staleness_bound" in knobs else 0.02
+    spec = condition(
+        name,
+        MNIST.scaled(scale),
+        cache_items=200,
+        sync="batch",
+        collective=CollectiveModel(gradient_bytes=GRAD),
+        **knobs,
+    )
+    report = assert_parity(spec, epochs=2)
+    assert sum(row[5] for row in report.sim_samples) > 0
+
+
+def test_vector_engine_parity_with_collective_cost():
+    """overlap="none" collective specs stay on the vector engine (barrier
+    clock jumps land between segments); overlap="buckets" falls back to
+    the scalar stepper.  Both must hold exact parity."""
+    w = MNIST.scaled(0.02)
+    cm = CollectiveModel(gradient_bytes=GRAD)
+    for overlap in ("none", "buckets"):
+        spec = DataPlaneSpec(
+            workload=w,
+            cache_items=300,
+            sync="batch",
+            collective=cm,
+            overlap=overlap,
+            engine="vector",
+        )
+        assert_parity(spec, epochs=2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: seed-swept invariants.
+# ---------------------------------------------------------------------------
+@settings(max_examples=8)
+@given(
+    seed=st.integers(0, 10_000),
+    slow=st.integers(0, 2),
+    comp=st.sampled_from([1.0, 1.5, 2.0, 4.0]),
+    grad=st.sampled_from([0, 100_000, GRAD]),
+    n_buckets=st.sampled_from([1, 2, 4, 8]),
+)
+def test_comm_overlap_invariants_seed_swept(seed, slow, comp, grad, n_buckets):
+    """For cache-only (non-interacting) straggler clusters, at every swept
+    (seed, straggler, gradient, bucketing) point:
+
+    1. bucket overlap never increases any node's wall clock versus
+       overlap="none" at equal collective cost (it can only hide comm);
+    2. charged comm under overlap="none" equals batches * the closed-form
+       duration, which dominates the bandwidth lower bound;
+    3. tier outcomes and Class A/B totals are unchanged by EVERY
+       sync/overlap/mitigation knob — the communication schedule moves
+       clocks, never cache behaviour;
+    4. the whole family is deterministic across runs.
+    """
+    w = _workload()
+    cm = CollectiveModel(gradient_bytes=grad, n_buckets=n_buckets)
+    # bandwidth=1.0 keeps every rank's network unscaled, so the barrier
+    # comm (a max over the parked ranks' durations) IS the closed form.
+    base = DataPlaneSpec(
+        workload=w,
+        cache_items=w.partition_size // 2,
+        nodes=straggler_profiles(
+            w.n_nodes, slow_ranks=(slow,), compute=comp, bandwidth=1.0
+        ),
+        seed=seed % 7,
+        sync="batch",
+    )
+    variants = {
+        "none": dataclasses.replace(base, collective=cm),
+        "buckets": dataclasses.replace(base, collective=cm, overlap="buckets"),
+        "backup": dataclasses.replace(base, collective=cm, backup_workers=1),
+        "stale": dataclasses.replace(base, collective=cm, staleness_bound=2),
+    }
+    runs = {k: s.build_sim().run(epochs=2) for k, s in variants.items()}
+    base_run = base.build_sim().run(epochs=2)
+
+    # (1) overlap never worse than unoverlapped at equal cost.
+    for n_row, o_row in zip(runs["none"][0], runs["buckets"][0]):
+        assert o_row.wall_clock_seconds <= n_row.wall_clock_seconds * (1 + 1e-9)
+
+    # (2) charged comm == batches * closed form >= lower bound.
+    per_batch = cm.allreduce_seconds(DEFAULT_NETWORK, w.n_nodes)
+    assert per_batch >= cm.ring_lower_bound_seconds(DEFAULT_NETWORK, w.n_nodes)
+    batches = 2 * (w.partition_size // w.batch_size)
+    for node in range(w.n_nodes):
+        total = sum(
+            r.allreduce_comm_seconds for r in runs["none"][0] if r.node == node
+        )
+        assert total == pytest.approx(batches * per_batch, rel=1e-12)
+
+    # (3) the data plane cannot tell any of the knobs apart.
+    reference = (
+        aggregate_tier_hits(base_run[0]),
+        base_run[1].class_a_requests,
+        base_run[1].class_b_requests,
+        sorted((s.epoch, s.node, s.samples) for s in base_run[0]),
+    )
+    for key, (stats, store) in runs.items():
+        assert (
+            aggregate_tier_hits(stats),
+            store.class_a_requests,
+            store.class_b_requests,
+            sorted((s.epoch, s.node, s.samples) for s in stats),
+        ) == reference, key
+
+    # (4) determinism.
+    again = variants["buckets"].build_sim().run(epochs=2)
+    assert [dataclasses.asdict(s) for s in runs["buckets"][0]] == [
+        dataclasses.asdict(s) for s in again[0]
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Registry conditions.
+# ---------------------------------------------------------------------------
+def test_comm_conditions_registered():
+    w = MNIST.scaled(0.02)
+    cost = condition("bsync-cost", w, cache_items=300)
+    assert cost.sync == "batch" and cost.collective is not None
+    assert cost.collective.gradient_bytes == GRAD
+    assert "+comm" in cost.label()
+    ovl = condition("overlap", w, cache_items=300)
+    assert ovl.overlap == "buckets" and "+ovl" in ovl.label()
+    backup = condition("backup-1", w, cache_items=300)
+    assert backup.backup_workers == 1 and backup.nodes is not None
+    assert "+backup1" in backup.label()
+    stale = condition("stale-2", w, cache_items=300)
+    assert stale.staleness_bound == 2 and "+stale2" in stale.label()
+    # gradient_bytes= override threads through to the model.
+    tiny = condition("bsync-cost", w, cache_items=300, gradient_bytes=4)
+    assert tiny.collective.gradient_bytes == 4

@@ -177,7 +177,7 @@ def test_sim_runtime_parity_exact(name, kw):
     spec = condition(name, MNIST.scaled(0.02), **kw)  # 1200 samples, 3 nodes
     report = assert_parity(spec, epochs=2)
     assert report.sim_samples == report.runtime_samples
-    assert sum(n for _, _, n, _, _ in report.sim_samples) == 2 * 1200
+    assert sum(row[2] for row in report.sim_samples) == 2 * 1200
 
 
 @pytest.mark.parametrize(
