@@ -1,0 +1,70 @@
+"""Parity linter: the mirror/shared-implementation/no-tolerance discipline
+as a machine-checked AST analysis pass (ISSUE 9 tentpole).
+
+Every exact-``==`` parity claim in docs/PARITY.md rests on source-level
+conventions: mirrored driver lines between ``NodeSimulator`` and
+``DeliLoader``, ONE shared implementation for every decision procedure,
+virtual-clock-only time in the simulation domain, sequential-``cumsum``
+float chains, and a strict no-tolerance rule in parity tests.  Reviewer
+vigilance does not scale with the codebase; this package turns each
+convention into a rule that fails CI when it drifts:
+
+``mirror-drift`` (PL001)
+    Mirrored regions are *declared in source* via paired
+    ``# parity-mirror: <name> begin/end`` markers; the checker verifies
+    normalized-AST equivalence between the two halves.  Normalization is
+    rename-insensitive for the declared clock/time variable (``self.t``
+    on the simulator is the same operation as ``self.clock.sleep`` on the
+    loader) and for explicitly-declared role aliases, otherwise exact.
+    ``mode=call-shape`` regions (the two ``SubstepAccess`` /
+    ``BucketedBatchComm`` instantiation sites) compare the constructor's
+    keyword surface instead — operands are per-projection wiring by
+    design, but a keyword added on one side only is drift.
+
+``clock-discipline`` (PL002)
+    Sim-domain modules (``core/``, ``oracle/``, ``engine/``,
+    ``pipeline/``) must not read wall clocks (``time.time`` /
+    ``perf_counter`` / ``datetime.now``) or call module-level ``random``
+    functions — virtual clocks and seeded ``random.Random`` instances
+    only.  The wall-clock abstraction itself (``core/clock.py``), the
+    threaded free-running service (``core/prefetcher.py``) and
+    ``launch/dryrun.py`` are the explicit allowlist.
+
+``float-determinism`` (PL003)
+    No ``np.sum`` (pairwise summation) in sim-domain float chains, no
+    built-in ``sum()`` feeding time/stats accumulators, no unordered
+    set-iteration feeding float accumulation — the
+    ``np.cumsum``-not-pairwise rule from ``repro/engine/vector.py``,
+    enforced.
+
+``no-tolerance`` (PL004)
+    Test files that import ``assert_parity`` (or are named as parity
+    tests) must not use ``pytest.approx`` / ``math.isclose`` /
+    ``abs(...) < eps`` comparisons.  Closed-form cost-model pins that
+    genuinely need a relative bound live in the committed baseline with a
+    stated reason — visible exceptions, never silent ones.
+
+``shared-state`` (PL005)
+    Cross-rank mutable state (the cluster placement in-flight set) may
+    only be *mutated* inside ``core/lockstep.py`` — the shared
+    ``LockstepPrefetchService`` is what keeps both projections' mutations
+    at bit-identical virtual times.  Wiring assignments are fine; a new
+    ``.add``/``.discard``/``.update`` site anywhere else is flagged.
+
+Run it: ``python -m repro.analysis [--baseline tools/parity_lint_baseline
+.json]`` — exit 0 when every finding is baselined, 1 otherwise.  CI runs
+it as the named ``parity-lint`` step in ``.github/workflows/smoke.yml``.
+"""
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.mirrors import MirrorRegion, check_mirrors, scan_mirror_regions
+from repro.analysis.cli import main, run_analysis
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "MirrorRegion",
+    "check_mirrors",
+    "scan_mirror_regions",
+    "main",
+    "run_analysis",
+]

@@ -1,0 +1,142 @@
+"""``python -m repro.analysis`` — run the parity linter over the repo.
+
+Exit status is 0 iff every finding is covered by the baseline
+(``--baseline tools/parity_lint_baseline.json`` in CI); stale baseline
+entries are reported as notes, never failures, so pruning stays a chore
+rather than an emergency.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Baseline, Finding, RULE_CODES
+from repro.analysis.mirrors import MirrorRegion, check_mirrors, scan_mirror_regions
+from repro.analysis.rules import run_rules_on_source
+
+#: directories scanned for python sources (repo-relative).
+SCAN_ROOTS = ("src", "tests", "tools")
+_SKIP_PARTS = {"__pycache__", ".git", ".pytest_cache"}
+
+
+def _iter_py_files(root: pathlib.Path) -> List[Tuple[pathlib.Path, str]]:
+    out: List[Tuple[pathlib.Path, str]] = []
+    for sub in SCAN_ROOTS:
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if _SKIP_PARTS.intersection(path.parts):
+                continue
+            out.append((path, path.relative_to(root).as_posix()))
+    return out
+
+
+def run_analysis(root: pathlib.Path) -> List[Finding]:
+    """Scan the tree under ``root``; returns all findings, sorted."""
+    findings: List[Finding] = []
+    regions: List[MirrorRegion] = []
+    for path, relpath in _iter_py_files(root):
+        source = path.read_text(encoding="utf-8")
+        file_regions, marker_findings = scan_mirror_regions(path, relpath)
+        regions += file_regions
+        findings += marker_findings
+        findings += run_rules_on_source(relpath, source)
+    findings += check_mirrors(regions)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="parity linter: mirror/clock/float/tolerance/"
+        "shared-state invariants as an AST pass (rules "
+        + ", ".join(f"{code} {slug}" for slug, code in RULE_CODES.items())
+        + ")",
+    )
+    parser.add_argument(
+        "--root",
+        type=pathlib.Path,
+        default=pathlib.Path.cwd(),
+        help="repo root to scan (default: cwd)",
+    )
+    parser.add_argument(
+        "--baseline",
+        type=pathlib.Path,
+        default=None,
+        help="accepted-exception ledger (tools/parity_lint_baseline.json)",
+    )
+    parser.add_argument(
+        "--json", action="store_true", help="machine-readable findings on stdout"
+    )
+    parser.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="write all current findings to --baseline as entries with "
+        "reason=TODO (candidates for human review, not an auto-accept)",
+    )
+    args = parser.parse_args(argv)
+
+    findings = run_analysis(args.root.resolve())
+
+    if args.write_baseline:
+        if args.baseline is None:
+            parser.error("--write-baseline requires --baseline")
+        Baseline.from_findings(
+            findings, reason="TODO: justify or fix"
+        ).save(args.baseline)
+        print(
+            f"wrote {len(findings)} finding(s) to {args.baseline} — "
+            "review every reason before committing"
+        )
+        return 0
+
+    baseline = Baseline() if args.baseline is None else Baseline.load(args.baseline)
+    new, stale = baseline.filter(findings)
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "findings": [
+                        {
+                            "rule": f.rule,
+                            "code": f.code,
+                            "path": f.path,
+                            "line": f.line,
+                            "symbol": f.symbol,
+                            "key": f.key,
+                            "message": f.message,
+                            "hint": f.hint,
+                            "baselined": f not in set(new),
+                        }
+                        for f in findings
+                    ],
+                    "new": len(new),
+                    "stale": stale,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in new:
+            print(f.render())
+        for entry in stale:
+            print(
+                f"note: stale baseline entry ({entry['rule']} {entry['path']} "
+                f"{entry['symbol']} {entry['key']}): {entry['unused']} unused "
+                "count(s) — prune it"
+            )
+        baselined = len(findings) - len(new)
+        print(
+            f"parity-lint: {len(findings)} finding(s), {baselined} baselined, "
+            f"{len(new)} new"
+        )
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Structured findings + the committed-baseline mechanism.
+
+A ``Finding`` is one rule violation at one source location: rule slug +
+code, repo-relative path, line, enclosing symbol, a short stable ``key``
+(what was matched, e.g. ``pytest.approx`` or ``np.sum``), a message and a
+fix hint.
+
+The baseline (``tools/parity_lint_baseline.json``) holds *accepted
+pre-existing exceptions* so the CI gate fails only on NEW findings.
+Entries match findings by fingerprint — ``(rule, path, symbol, key)``,
+deliberately *excluding* the line number so unrelated edits above a
+baselined site do not churn the file — with a ``count`` bounding how many
+occurrences of that fingerprint are accepted and a mandatory human
+``reason``.  A finding beyond its baselined count (or with no entry) fails
+the gate; a baseline entry no new scan reproduces is reported as stale so
+dead exceptions get pruned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from collections import Counter
+from typing import Dict, Iterable, List, Tuple
+
+#: rule slug -> stable code (sorted report order).
+RULE_CODES = {
+    "mirror-drift": "PL001",
+    "clock-discipline": "PL002",
+    "float-determinism": "PL003",
+    "no-tolerance": "PL004",
+    "shared-state": "PL005",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str  # slug, a RULE_CODES key
+    path: str  # repo-relative posix path
+    line: int  # 1-based
+    symbol: str  # enclosing function/class (or mirror name), "" at module level
+    key: str  # short stable token of what matched (baseline fingerprint part)
+    message: str
+    hint: str
+
+    @property
+    def code(self) -> str:
+        return RULE_CODES[self.rule]
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Baseline identity: line numbers excluded on purpose (edits above
+        a baselined site must not invalidate its entry)."""
+        return (self.rule, self.path, self.symbol, self.key)
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return (
+            f"{self.path}:{self.line}: {self.code} {self.rule}{sym} "
+            f"{self.message}\n    hint: {self.hint}"
+        )
+
+
+class Baseline:
+    """Accepted-exception ledger, loaded from/saved to JSON."""
+
+    def __init__(self, entries: Iterable[dict] = ()):  # entries: raw dicts
+        self.entries: List[dict] = [dict(e) for e in entries]
+        for e in self.entries:
+            for field in ("rule", "path", "symbol", "key", "count", "reason"):
+                if field not in e:
+                    raise ValueError(f"baseline entry missing {field!r}: {e}")
+            if e["rule"] not in RULE_CODES:
+                raise ValueError(f"baseline entry has unknown rule: {e}")
+
+    @classmethod
+    def load(cls, path: pathlib.Path) -> "Baseline":
+        data = json.loads(path.read_text(encoding="utf-8"))
+        return cls(data.get("entries", []))
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding], reason: str) -> "Baseline":
+        counts = Counter(f.fingerprint for f in findings)
+        return cls(
+            {
+                "rule": rule,
+                "path": p,
+                "symbol": sym,
+                "key": key,
+                "count": n,
+                "reason": reason,
+            }
+            for (rule, p, sym, key), n in sorted(counts.items())
+        )
+
+    def save(self, path: pathlib.Path) -> None:
+        payload = {
+            "version": 1,
+            "note": (
+                "Accepted pre-existing parity-lint exceptions; every entry "
+                "needs a reason.  Matching ignores line numbers (fingerprint "
+                "= rule/path/symbol/key).  Regenerate candidates with "
+                "python -m repro.analysis --write-baseline."
+            ),
+            "entries": self.entries,
+        }
+        path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+    def allowed(self) -> Dict[Tuple[str, str, str, str], int]:
+        out: Counter = Counter()
+        for e in self.entries:
+            out[(e["rule"], e["path"], e["symbol"], e["key"])] += int(e["count"])
+        return dict(out)
+
+    def filter(
+        self, findings: Iterable[Finding]
+    ) -> Tuple[List[Finding], List[dict]]:
+        """Split ``findings`` against the baseline.
+
+        Returns ``(new, stale)``: findings NOT covered by the baseline
+        (gate failures), and baseline entries whose fingerprint matched
+        fewer findings than their count (stale — prune candidates).
+        Within one fingerprint, the accepted budget covers occurrences in
+        source order; the overflow is new.
+        """
+        budget = Counter(
+            {fp: n for fp, n in self.allowed().items()}
+        )
+        new: List[Finding] = []
+        for f in sorted(findings, key=lambda f: (f.path, f.line)):
+            if budget.get(f.fingerprint, 0) > 0:
+                budget[f.fingerprint] -= 1
+            else:
+                new.append(f)
+        stale = [
+            {
+                "rule": fp[0],
+                "path": fp[1],
+                "symbol": fp[2],
+                "key": fp[3],
+                "unused": n,
+            }
+            for fp, n in sorted(budget.items())
+            if n > 0
+        ]
+        return new, stale

@@ -1,0 +1,489 @@
+"""Rule PL001 ``mirror-drift``: declared mirrored regions stay AST-equal.
+
+The parity story leans on *mirrored driver lines*: ``NodeSimulator.sync_to``
+and ``DeliLoader.sync_to`` must perform the identical float operations in
+the identical order, the oracle-cursor advance must sit at the same point
+of both epoch drivers, the placement install must wire the shared service
+identically (docs/PARITY.md).  Historically "mirrored" was a code comment;
+this module makes it a declaration the CI gate enforces.
+
+Declaring a mirror
+------------------
+
+Wrap each half in paired markers::
+
+    # parity-mirror: sync-to begin clock=self.t stats=self._stats
+    ...the mirrored lines...
+    # parity-mirror: sync-to end
+
+A mirror name must appear as exactly TWO begin/end regions across the
+scanned tree.  The region body (lines strictly between the markers) is
+dedented, parsed, normalized, and compared by ``ast.dump`` equality.
+
+Normalization — rename-insensitive for the clock/time variable, otherwise
+exact:
+
+* every ``key=expr`` token on the begin marker (except the reserved
+  ``clock`` and the call-shape keys) declares a *role alias*: each
+  occurrence of that exact expression subtree is replaced by the
+  placeholder name ``__key__``, so ``self._stats`` on one side and
+  ``self._active_stats`` on the other both normalize to ``__stats__`` —
+  the aliasing is explicit and auditable in source, never guessed;
+* the reserved ``clock=expr`` role canonicalizes the *time idiom*: the
+  simulator spells virtual time as a float attribute (``self.t``), the
+  lock-step loader as a ``VirtualClock`` object (``self.clock``), and the
+  same operation has two spellings —
+
+  ====================  =========================  =====================
+  operation             float-attr spelling        clock-object spelling
+  ====================  =========================  =====================
+  read now              ``self.t``                 ``clock.now()``
+  jump to barrier       ``self.t = x``             ``clock.advance_to(x)``
+  charge/sleep          ``self.t += x``            ``clock.sleep(x)``
+  now as callable       ``lambda: self.t``         ``clock.now``
+  ====================  =========================  =====================
+
+  both spellings canonicalize to the same ``__clock_now__`` /
+  ``__clock_set__`` / ``__clock_add__`` forms.  Everything else must match
+  exactly — a reordered statement, a changed operand, an extra guard is
+  drift.
+
+``mode=call-shape`` (the constructor-site mirrors)
+--------------------------------------------------
+
+The two ``SubstepAccess`` / ``BucketedBatchComm`` instantiation sites wire
+per-projection operands by design (sentinel payloads vs real bytes, bucket
+billing routed differently), so operand equality is the wrong check.  What
+must NOT drift is the *surface*: ``mode=call-shape callee=<Name>`` regions
+must each contain exactly one call to ``<Name>``, and the two calls must
+agree on positional-argument count and the exact ordered tuple of keyword
+names — a keyword added or renamed on one side only is exactly the silent
+drift this rule exists to catch.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import textwrap
+import tokenize
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+MARKER_RE = re.compile(
+    r"#\s*parity-mirror:\s*(?P<name>[A-Za-z0-9_.\-]+)\s+(?P<kind>begin|end)\b(?P<rest>[^\n]*)"
+)
+
+_HINT = (
+    "mirrored halves must stay AST-equivalent (rename-insensitive for the "
+    "declared clock/roles); re-mirror the lines or update both halves "
+    "together — see docs/PARITY.md 'Enforced by machine'"
+)
+
+
+@dataclasses.dataclass
+class MirrorRegion:
+    """One declared half of a mirror pair."""
+
+    name: str
+    path: str  # repo-relative posix
+    line: int  # line of the begin marker (1-based)
+    body: str  # dedented source between the markers
+    mode: str = "exact"  # "exact" | "call-shape"
+    callee: Optional[str] = None  # call-shape: the constructor name
+    roles: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _parse_marker_rest(rest: str) -> Dict[str, str]:
+    """``key=expr`` tokens (space separated, exprs space-free)."""
+    out: Dict[str, str] = {}
+    for tok in rest.split():
+        if "=" not in tok:
+            raise ValueError(f"bad parity-mirror token {tok!r} (want key=expr)")
+        key, expr = tok.split("=", 1)
+        if not key.isidentifier():
+            raise ValueError(f"bad parity-mirror role name {tok!r}")
+        out[key] = expr
+    return out
+
+
+def _marker_lines(source: str) -> Dict[int, "re.Match"]:
+    """Line numbers of real ``# parity-mirror:`` comments.
+
+    Tokenized so marker text quoted inside a docstring or string literal
+    (e.g. this module's own examples) is never mistaken for a marker;
+    falls back to raw line scanning if the file does not tokenize.
+    """
+    out: Dict[int, re.Match] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                m = MARKER_RE.search(tok.string)
+                if m is not None:
+                    out[tok.start[0]] = m
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = MARKER_RE.search(text)
+            if m is not None:
+                out[lineno] = m
+    return out
+
+
+def scan_mirror_regions(
+    path: pathlib.Path, relpath: str
+) -> Tuple[List[MirrorRegion], List[Finding]]:
+    """Extract every marked region of one file; marker errors (unpaired
+    begin/end, bad tokens, nesting) are PL001 findings themselves."""
+    regions: List[MirrorRegion] = []
+    findings: List[Finding] = []
+    open_region: Optional[Tuple[MirrorRegion, List[str]]] = None
+    source = path.read_text(encoding="utf-8")
+    markers = _marker_lines(source)
+    lines = source.splitlines(keepends=True)
+    for lineno, text in enumerate(lines, start=1):
+        m = markers.get(lineno)
+        if m is None:
+            if open_region is not None:
+                open_region[1].append(text)
+            continue
+        name, kind, rest = m.group("name"), m.group("kind"), m.group("rest")
+        if kind == "begin":
+            if open_region is not None:
+                findings.append(
+                    Finding(
+                        rule="mirror-drift",
+                        path=relpath,
+                        line=lineno,
+                        symbol=name,
+                        key=f"marker:{name}",
+                        message=(
+                            f"parity-mirror {name!r} begins inside the still-open "
+                            f"region {open_region[0].name!r} (markers do not nest)"
+                        ),
+                        hint="close the previous region with its end marker first",
+                    )
+                )
+                continue
+            try:
+                tokens = _parse_marker_rest(rest)
+            except ValueError as exc:
+                findings.append(
+                    Finding(
+                        rule="mirror-drift",
+                        path=relpath,
+                        line=lineno,
+                        symbol=name,
+                        key=f"marker:{name}",
+                        message=str(exc),
+                        hint="marker syntax: # parity-mirror: <name> begin [mode=call-shape] [callee=Name] [role=expr ...]",
+                    )
+                )
+                continue
+            mode = tokens.pop("mode", "exact")
+            callee = tokens.pop("callee", None)
+            if mode not in ("exact", "call-shape"):
+                findings.append(
+                    Finding(
+                        rule="mirror-drift",
+                        path=relpath,
+                        line=lineno,
+                        symbol=name,
+                        key=f"marker:{name}",
+                        message=f"unknown parity-mirror mode {mode!r}",
+                        hint="use mode=call-shape or omit mode (exact)",
+                    )
+                )
+                continue
+            open_region = (
+                MirrorRegion(
+                    name=name,
+                    path=relpath,
+                    line=lineno,
+                    body="",
+                    mode=mode,
+                    callee=callee,
+                    roles=tokens,
+                ),
+                [],
+            )
+        else:  # end
+            if open_region is None or open_region[0].name != name:
+                findings.append(
+                    Finding(
+                        rule="mirror-drift",
+                        path=relpath,
+                        line=lineno,
+                        symbol=name,
+                        key=f"marker:{name}",
+                        message=f"parity-mirror {name!r} end without matching begin",
+                        hint="every end marker closes the begin marker of the same name",
+                    )
+                )
+                continue
+            region, body_lines = open_region
+            region.body = textwrap.dedent("".join(body_lines))
+            regions.append(region)
+            open_region = None
+    if open_region is not None:
+        findings.append(
+            Finding(
+                rule="mirror-drift",
+                path=relpath,
+                line=open_region[0].line,
+                symbol=open_region[0].name,
+                key=f"marker:{open_region[0].name}",
+                message=f"parity-mirror {open_region[0].name!r} begin without end",
+                hint="close the region with # parity-mirror: <name> end",
+            )
+        )
+    return regions, findings
+
+
+# -- normalization -----------------------------------------------------------
+def _expr_eq(node: ast.AST, pattern_src: str) -> bool:
+    """Subtree equality against a declared role/clock expression.
+
+    Compared by ``ast.unparse`` so Load/Store context never matters —
+    ``self.t`` as an assignment target is the same clock as ``self.t``
+    read."""
+    if not isinstance(node, ast.expr):
+        return False
+    try:
+        return ast.unparse(node) == pattern_src
+    except Exception:
+        return False
+
+
+class _RoleSubst(ast.NodeTransformer):
+    """Replace every occurrence of a declared role expression with the
+    placeholder name ``__role__``."""
+
+    def __init__(self, role: str, pattern: ast.expr):
+        self.role = role
+        self.pattern_src = ast.unparse(pattern)
+
+    def visit(self, node: ast.AST) -> ast.AST:
+        if _expr_eq(node, self.pattern_src):
+            ctx = getattr(node, "ctx", ast.Load())
+            return ast.copy_location(ast.Name(id=f"__{self.role}__", ctx=ctx), node)
+        return super().generic_visit(node)
+
+
+class _ClockCanon(ast.NodeTransformer):
+    """Canonicalize the two spellings of virtual-time operations (see the
+    module docstring's table) against the declared clock expression."""
+
+    _CALL_MAP = {"now": "__clock_now__", "advance_to": "__clock_set__", "sleep": "__clock_add__"}
+    _REF_MAP = {
+        "now": "__clock_now_ref__",
+        "advance_to": "__clock_set_ref__",
+        "sleep": "__clock_add_ref__",
+    }
+
+    def __init__(self, clock: ast.expr):
+        self.clock_src = ast.unparse(clock)
+
+    def _is_clock(self, node: ast.AST) -> bool:
+        return _expr_eq(node, self.clock_src)
+
+    @staticmethod
+    def _call(fn: str, args: Sequence[ast.expr]) -> ast.Call:
+        return ast.Call(func=ast.Name(id=fn, ctx=ast.Load()), args=list(args), keywords=[])
+
+    def visit_Assign(self, node: ast.Assign) -> ast.AST:
+        if len(node.targets) == 1 and self._is_clock(node.targets[0]):
+            value = self.visit(node.value)
+            return ast.copy_location(
+                ast.Expr(value=self._call("__clock_set__", [value])), node
+            )
+        return self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> ast.AST:
+        if self._is_clock(node.target) and isinstance(node.op, ast.Add):
+            value = self.visit(node.value)
+            return ast.copy_location(
+                ast.Expr(value=self._call("__clock_add__", [value])), node
+            )
+        return self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> ast.AST:
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr in self._CALL_MAP
+            and self._is_clock(fn.value)
+        ):
+            return ast.copy_location(
+                self._call(
+                    self._CALL_MAP[fn.attr], [self.visit(a) for a in node.args]
+                ),
+                node,
+            )
+        return self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> ast.AST:
+        # Bare (uncalled) clock method reference: clock.now as a callable.
+        if fn := self._REF_MAP.get(node.attr):
+            if self._is_clock(node.value):
+                return ast.copy_location(ast.Name(id=fn, ctx=ast.Load()), node)
+        # The clock expression itself in a load position reads "now".
+        if self._is_clock(node) and isinstance(node.ctx, ast.Load):
+            return ast.copy_location(self._call("__clock_now__", []), node)
+        return self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> ast.AST:
+        if self._is_clock(node) and isinstance(node.ctx, ast.Load):
+            return ast.copy_location(self._call("__clock_now__", []), node)
+        return node
+
+    def visit_Lambda(self, node: ast.Lambda) -> ast.AST:
+        node = self.generic_visit(node)  # canonicalize the body first
+        a = node.args
+        if (
+            not (a.args or a.posonlyargs or a.kwonlyargs or a.vararg or a.kwarg)
+            and isinstance(node.body, ast.Call)
+            and isinstance(node.body.func, ast.Name)
+            and node.body.func.id == "__clock_now__"
+            and not node.body.args
+        ):
+            # ``lambda: self.t`` is the float-attr spelling of the
+            # clock-object's bare ``clock.now`` callable.
+            return ast.copy_location(
+                ast.Name(id="__clock_now_ref__", ctx=ast.Load()), node
+            )
+        return node
+
+
+def _parse_region(body: str) -> ast.Module:
+    """Parse a region body; bodies lifted from inside a function may
+    contain ``return``, so fall back to wrapping in a throwaway def and
+    unwrapping its statements."""
+    try:
+        return ast.parse(body)
+    except SyntaxError:
+        wrapped = "def __region__():\n" + textwrap.indent(body or "pass\n", "    ")
+        tree = ast.parse(wrapped)
+        fn = tree.body[0]
+        assert isinstance(fn, ast.FunctionDef)
+        return ast.Module(body=fn.body, type_ignores=[])
+
+
+def normalize_region(region: MirrorRegion) -> str:
+    """Parse + normalize one region body; returns the comparable dump."""
+    tree = _parse_region(region.body)
+    for role, expr_src in sorted(region.roles.items()):
+        if role == "clock":
+            continue
+        pattern = ast.parse(expr_src, mode="eval").body
+        tree = _RoleSubst(role, pattern).visit(tree)
+    if "clock" in region.roles:
+        clock = ast.parse(region.roles["clock"], mode="eval").body
+        tree = _ClockCanon(clock).visit(tree)
+    return ast.dump(tree)
+
+
+def _call_shape(region: MirrorRegion) -> Tuple[int, Tuple[str, ...]]:
+    """(n positional args, ordered keyword names) of the single declared
+    constructor call in a call-shape region."""
+    if not region.callee:
+        raise ValueError(f"call-shape mirror {region.name!r} needs callee=<Name>")
+    tree = _parse_region(region.body)
+    calls = [
+        node
+        for node in ast.walk(tree)
+        if isinstance(node, ast.Call)
+        and (
+            (isinstance(node.func, ast.Name) and node.func.id == region.callee)
+            or (isinstance(node.func, ast.Attribute) and node.func.attr == region.callee)
+        )
+    ]
+    if len(calls) != 1:
+        raise ValueError(
+            f"call-shape mirror {region.name!r} needs exactly one "
+            f"{region.callee}(...) call in the region, found {len(calls)}"
+        )
+    call = calls[0]
+    kw_names = tuple(kw.arg if kw.arg is not None else "**" for kw in call.keywords)
+    return len(call.args), kw_names
+
+
+def check_mirrors(regions: Sequence[MirrorRegion]) -> List[Finding]:
+    """Pairing + equivalence findings over all scanned regions."""
+    findings: List[Finding] = []
+    by_name: Dict[str, List[MirrorRegion]] = {}
+    for r in regions:
+        by_name.setdefault(r.name, []).append(r)
+    for name, halves in sorted(by_name.items()):
+        if len(halves) != 2:
+            for r in halves:
+                findings.append(
+                    Finding(
+                        rule="mirror-drift",
+                        path=r.path,
+                        line=r.line,
+                        symbol=name,
+                        key=f"pairing:{name}",
+                        message=(
+                            f"parity-mirror {name!r} has {len(halves)} region(s); "
+                            "a mirror is exactly two halves"
+                        ),
+                        hint="declare the partner region (or remove the orphan marker)",
+                    )
+                )
+            continue
+        a, b = halves
+        if a.mode != b.mode or (a.mode == "call-shape" and a.callee != b.callee):
+            findings.append(_mismatch(name, a, b, "the two halves declare different modes"))
+            continue
+        try:
+            if a.mode == "call-shape":
+                shape_a, shape_b = _call_shape(a), _call_shape(b)
+                if shape_a != shape_b:
+                    findings.append(
+                        _mismatch(
+                            name,
+                            a,
+                            b,
+                            f"constructor surface drifted: {a.callee} takes "
+                            f"{shape_a[0]} positional + keywords {list(shape_a[1])} "
+                            f"vs {shape_b[0]} positional + keywords {list(shape_b[1])}",
+                        )
+                    )
+            else:
+                dump_a, dump_b = normalize_region(a), normalize_region(b)
+                if dump_a != dump_b:
+                    findings.append(
+                        _mismatch(name, a, b, _first_divergence(dump_a, dump_b))
+                    )
+        except (SyntaxError, ValueError) as exc:
+            findings.append(_mismatch(name, a, b, f"region not checkable: {exc}"))
+    return findings
+
+
+def _mismatch(name: str, a: MirrorRegion, b: MirrorRegion, detail: str) -> Finding:
+    return Finding(
+        rule="mirror-drift",
+        path=a.path,
+        line=a.line,
+        symbol=name,
+        key=f"mirror:{name}",
+        message=(
+            f"mirror {name!r} drifted between {a.path}:{a.line} and "
+            f"{b.path}:{b.line}: {detail}"
+        ),
+        hint=_HINT,
+    )
+
+
+def _first_divergence(dump_a: str, dump_b: str, context: int = 40) -> str:
+    """A human-aimable pointer into two normalized dumps."""
+    n = min(len(dump_a), len(dump_b))
+    i = next((j for j in range(n) if dump_a[j] != dump_b[j]), n)
+    lo = max(0, i - context)
+    return (
+        "normalized ASTs differ near "
+        f"...{dump_a[lo:i + context]!r} vs ...{dump_b[lo:i + context]!r}"
+    )

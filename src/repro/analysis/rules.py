@@ -1,0 +1,498 @@
+"""Rules PL002–PL005: clock discipline, float determinism, no-tolerance
+tests, shared-state discipline.
+
+Each rule is a function taking ``(tree, relpath, source)`` and returning
+``Finding`` objects; ``run_rules_on_source`` dispatches by the file's
+repo-relative path (sim-domain rules vs test rules).  The rules are
+deliberately syntactic — they flag *idioms*, not proven bugs, and the
+committed baseline is the pressure valve for the few accepted exceptions.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+#: Sim-domain package prefixes (repo-relative, under src/).
+SIM_DOMAIN_PREFIXES = (
+    "src/repro/core/",
+    "src/repro/oracle/",
+    "src/repro/engine/",
+    "src/repro/pipeline/",
+)
+
+#: PL002 allowlist: the wall-clock abstraction itself, the threaded
+#: free-running service (real sleeps by design), and the dry-run launcher.
+CLOCK_ALLOWLIST = (
+    "src/repro/core/clock.py",
+    "src/repro/core/prefetcher.py",
+    "src/repro/launch/dryrun.py",
+)
+
+#: time-module attributes that read or consume wall time.
+_WALL_TIME_ATTRS = {
+    "time",
+    "time_ns",
+    "monotonic",
+    "monotonic_ns",
+    "perf_counter",
+    "perf_counter_ns",
+    "process_time",
+    "process_time_ns",
+    "sleep",
+}
+_DATETIME_NOW_ATTRS = {"now", "utcnow", "today"}
+#: module-level random functions are nondeterministic across runs; seeded
+#: ``random.Random(seed)`` / ``SystemRandom`` construction stays legal.
+_RANDOM_OK = {"Random", "SystemRandom"}
+
+#: names that smell like a float time/stats chain (PL003).
+FLOAT_PAT = re.compile(r"(seconds|wait|rate|duration|elapsed|_s\b|_t\b)", re.I)
+
+
+class _SymbolStack(ast.NodeVisitor):
+    """Visitor base that tracks the enclosing function/class name."""
+
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.stack: List[str] = []
+        self.findings: List[Finding] = []
+
+    @property
+    def symbol(self) -> str:
+        return ".".join(self.stack)
+
+    def _push_visit(self, node: ast.AST) -> None:
+        self.stack.append(node.name)  # type: ignore[attr-defined]
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _push_visit
+    visit_AsyncFunctionDef = _push_visit
+    visit_ClassDef = _push_visit
+
+    def emit(self, rule: str, node: ast.AST, key: str, message: str, hint: str) -> None:
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.relpath,
+                line=getattr(node, "lineno", 0),
+                symbol=self.symbol,
+                key=key,
+                message=message,
+                hint=hint,
+            )
+        )
+
+
+# -- PL002 clock-discipline --------------------------------------------------
+class _ClockDiscipline(_SymbolStack):
+    """Flag wall-clock reads and module-level ``random.*`` calls in
+    sim-domain code.  Tracks both ``import time`` attribute access and
+    ``from time import perf_counter`` style aliases."""
+
+    def __init__(self, relpath: str):
+        super().__init__(relpath)
+        # local alias -> ("time"|"datetime"|"random", original attr name)
+        self.from_aliases: dict = {}
+        # local alias -> module ("time"/"datetime"/"random")
+        self.module_aliases: dict = {}
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            root = alias.name.split(".")[0]
+            if root in ("time", "datetime", "random"):
+                self.module_aliases[alias.asname or root] = root
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = (node.module or "").split(".")[0]
+        if mod in ("time", "datetime", "random"):
+            for alias in node.names:
+                self.from_aliases[alias.asname or alias.name] = (mod, alias.name)
+        self.generic_visit(node)
+
+    def _flag(self, node: ast.AST, mod: str, attr: str) -> None:
+        if mod == "time" and attr in _WALL_TIME_ATTRS:
+            self.emit(
+                "clock-discipline",
+                node,
+                f"time.{attr}",
+                f"wall-clock call time.{attr} in sim-domain module",
+                "sim-domain code takes time from a Clock (core/clock.py): "
+                "use clock.now()/clock.sleep() so both projections share "
+                "one virtual timeline",
+            )
+        elif mod == "datetime" and attr in _DATETIME_NOW_ATTRS:
+            self.emit(
+                "clock-discipline",
+                node,
+                f"datetime.{attr}",
+                f"wall-clock call datetime.{attr} in sim-domain module",
+                "sim-domain code takes time from a Clock (core/clock.py), "
+                "never the host calendar",
+            )
+        elif mod == "random" and attr not in _RANDOM_OK:
+            self.emit(
+                "clock-discipline",
+                node,
+                f"random.{attr}",
+                f"module-level random.{attr} in sim-domain module "
+                "(shared hidden RNG state)",
+                "construct a seeded random.Random(seed) instance "
+                "(see core/store.py) so replays are deterministic",
+            )
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        value = node.value
+        if isinstance(value, ast.Name) and value.id in self.module_aliases:
+            self._flag(node, self.module_aliases[value.id], node.attr)
+        elif (
+            # datetime.datetime.now() — class attribute chain.
+            isinstance(value, ast.Attribute)
+            and isinstance(value.value, ast.Name)
+            and self.module_aliases.get(value.value.id) == "datetime"
+            and node.attr in _DATETIME_NOW_ATTRS
+        ):
+            self._flag(node, "datetime", node.attr)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load) and node.id in self.from_aliases:
+            mod, attr = self.from_aliases[node.id]
+            self._flag(node, mod, attr)
+
+
+def check_clock_discipline(tree: ast.AST, relpath: str) -> List[Finding]:
+    v = _ClockDiscipline(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+# -- PL003 float-determinism -------------------------------------------------
+_NP_NAMES = {"np", "numpy"}
+
+_SUM_HINT = (
+    "order-sensitive float accumulation must be sequential left-to-right: "
+    "use an explicit loop or np.cumsum(xs)[-1] (engine/vector.py's "
+    "cumsum-not-pairwise rule) so simulator and runtime round identically"
+)
+_SET_HINT = (
+    "iterating a set yields hash order, which is not stable across "
+    "processes; iterate a sorted() or insertion-ordered sequence before "
+    "accumulating floats or recording stats"
+)
+
+
+def _looks_floaty(text: str) -> bool:
+    return bool(FLOAT_PAT.search(text))
+
+
+class _FloatDeterminism(_SymbolStack):
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self._check_sum_assign(node.targets, node.value)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_sum_assign([node.target], node.value)
+        self.generic_visit(node)
+
+    def visit_Return(self, node: ast.Return) -> None:
+        if node.value is not None:
+            for call in self._sum_calls(node.value):
+                self._flag_sum(call, force=self._floaty_call(call))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # np.sum is pairwise summation: always wrong in a sim-domain
+        # float chain, flagged regardless of name heuristics.
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr in ("sum", "nansum")
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id in _NP_NAMES
+        ):
+            self.emit(
+                "float-determinism",
+                node,
+                f"{fn.value.id}.{fn.attr}",
+                f"{fn.value.id}.{fn.attr} uses pairwise summation — "
+                "rounding depends on block size, not arrival order",
+                _SUM_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self._is_set_expr(node.iter) and self._accumulates_floats(node.body):
+            self.emit(
+                "float-determinism",
+                node,
+                "set-iteration",
+                "iteration over an unordered set feeds float/stats "
+                "accumulation",
+                _SET_HINT,
+            )
+        self.generic_visit(node)
+
+    # helpers ---------------------------------------------------------------
+    def _check_sum_assign(self, targets: Sequence[ast.expr], value: ast.expr) -> None:
+        floaty_target = any(_looks_floaty(ast.unparse(t)) for t in targets)
+        for call in self._sum_calls(value):
+            self._flag_sum(call, force=floaty_target or self._floaty_call(call))
+
+    @staticmethod
+    def _sum_calls(expr: ast.expr) -> Iterator[ast.Call]:
+        for node in ast.walk(expr):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "sum"
+            ):
+                yield node
+
+    @staticmethod
+    def _floaty_call(call: ast.Call) -> bool:
+        return any(_looks_floaty(ast.unparse(a)) for a in call.args)
+
+    def _flag_sum(self, call: ast.Call, force: bool) -> None:
+        if not force:
+            return
+        self.emit(
+            "float-determinism",
+            call,
+            "sum",
+            "builtin sum() over a float time/stats chain — fold order is "
+            "an implementation detail the parity contract cannot lean on",
+            _SUM_HINT,
+        )
+
+    @staticmethod
+    def _is_set_expr(expr: ast.expr) -> bool:
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return True
+        if (
+            isinstance(expr, ast.Call)
+            and isinstance(expr.func, ast.Name)
+            and expr.func.id in ("set", "frozenset")
+        ):
+            return True
+        return False
+
+    @staticmethod
+    def _accumulates_floats(body: Sequence[ast.stmt]) -> bool:
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.AugAssign) and _looks_floaty(
+                    ast.unparse(node.target)
+                ):
+                    return True
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("record", "observe", "add_sample")
+                ):
+                    return True
+        return False
+
+
+def check_float_determinism(tree: ast.AST, relpath: str) -> List[Finding]:
+    v = _FloatDeterminism(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+# -- PL004 no-tolerance ------------------------------------------------------
+_TOLERANCE_HINT = (
+    "parity comparisons are exact == by policy (docs/PARITY.md): compare "
+    "with assert_parity / == and fix the float chain, never widen the "
+    "assertion; if this is a closed-form cost-model pin, add a baselined "
+    "exception with a reason instead"
+)
+_EPS_NAME = re.compile(r"(eps|tol)", re.I)
+
+
+def is_parity_test_file(relpath: str, source: str) -> bool:
+    """PL004 scope: tests that import assert_parity or carry parity naming."""
+    name = relpath.rsplit("/", 1)[-1]
+    if "parity" in name:
+        return True
+    return bool(re.search(r"\bassert_parity\b", source))
+
+
+class _NoTolerance(_SymbolStack):
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        label: Optional[str] = None
+        if isinstance(fn, ast.Attribute):
+            if fn.attr == "approx":
+                label = "pytest.approx"
+            elif fn.attr == "isclose":
+                label = "math.isclose"
+            elif fn.attr in ("allclose", "assert_allclose", "assert_almost_equal"):
+                label = f"np.{fn.attr}"
+        elif isinstance(fn, ast.Name):
+            if fn.id == "approx":
+                label = "pytest.approx"
+            elif fn.id == "isclose":
+                label = "math.isclose"
+        if label is not None:
+            self.emit(
+                "no-tolerance",
+                node,
+                label,
+                f"{label} in a parity test — tolerance comparisons are "
+                "banned where the contract is exact ==",
+                _TOLERANCE_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        # abs(a - b) < eps
+        if (
+            isinstance(node.left, ast.Call)
+            and isinstance(node.left.func, ast.Name)
+            and node.left.func.id == "abs"
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.Lt, ast.LtE))
+            and self._is_epsilon(node.comparators[0])
+        ):
+            self.emit(
+                "no-tolerance",
+                node,
+                "abs<eps",
+                "abs(...) < eps comparison in a parity test — this is a "
+                "tolerance in disguise",
+                _TOLERANCE_HINT,
+            )
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_epsilon(expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Constant) and isinstance(expr.value, float):
+            return abs(expr.value) < 1e-2
+        return bool(_EPS_NAME.search(ast.unparse(expr)))
+
+
+def check_no_tolerance(tree: ast.AST, relpath: str) -> List[Finding]:
+    v = _NoTolerance(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+# -- PL005 shared-state ------------------------------------------------------
+#: the one module allowed to mutate cross-rank placement state.
+SHARED_STATE_HOME = "src/repro/core/lockstep.py"
+_MUTATORS = {"add", "discard", "update", "remove", "clear", "pop"}
+_SHARED_PAT = re.compile(r"in_flight", re.I)
+_SHARED_HINT = (
+    "cross-rank mutable state is mutated only inside "
+    "core/lockstep.py (LockstepPrefetchService) so both projections see "
+    "mutations at bit-identical virtual times; route this through the "
+    "shared service instead of touching the set directly"
+)
+
+
+def _names_shared_state(expr: ast.expr) -> bool:
+    try:
+        return bool(_SHARED_PAT.search(ast.unparse(expr)))
+    except Exception:
+        return False
+
+
+class _SharedState(_SymbolStack):
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr in _MUTATORS
+            and _names_shared_state(fn.value)
+        ):
+            self.emit(
+                "shared-state",
+                node,
+                f".{fn.attr}",
+                f"in-flight set mutated via .{fn.attr}() outside "
+                "core/lockstep.py",
+                _SHARED_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if _names_shared_state(node.target):
+            self.emit(
+                "shared-state",
+                node,
+                "augassign",
+                "in-flight set mutated via augmented assignment outside "
+                "core/lockstep.py",
+                _SHARED_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        if any(_names_shared_state(t) for t in node.targets):
+            self.emit(
+                "shared-state",
+                node,
+                "delete",
+                "in-flight state deleted outside core/lockstep.py",
+                _SHARED_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # Plain rebinding (wiring) is allowed anywhere; subscript
+        # assignment into the shared structure is a mutation.
+        for t in node.targets:
+            if isinstance(t, ast.Subscript) and _names_shared_state(t.value):
+                self.emit(
+                    "shared-state",
+                    node,
+                    "subscript-assign",
+                    "in-flight state written by subscript outside "
+                    "core/lockstep.py",
+                    _SHARED_HINT,
+                )
+        self.generic_visit(node)
+
+
+def check_shared_state(tree: ast.AST, relpath: str) -> List[Finding]:
+    v = _SharedState(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+# -- dispatch ---------------------------------------------------------------
+def run_rules_on_source(relpath: str, source: str) -> List[Finding]:
+    """All path-scoped rules (PL002–PL005) for one file.
+
+    PL001 needs cross-file pairing and runs separately (``mirrors``).
+    """
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [
+            Finding(
+                rule="clock-discipline",
+                path=relpath,
+                line=exc.lineno or 0,
+                symbol="",
+                key="syntax-error",
+                message=f"file does not parse: {exc.msg}",
+                hint="fix the syntax error so the parity linter can scan it",
+            )
+        ]
+    findings: List[Finding] = []
+    in_sim_domain = relpath.startswith(SIM_DOMAIN_PREFIXES)
+    if in_sim_domain and relpath not in CLOCK_ALLOWLIST:
+        findings += check_clock_discipline(tree, relpath)
+    if in_sim_domain:
+        findings += check_float_determinism(tree, relpath)
+    if relpath.startswith("tests/") and is_parity_test_file(relpath, source):
+        findings += check_no_tolerance(tree, relpath)
+    if relpath.startswith("src/repro/") and relpath != SHARED_STATE_HOME:
+        findings += check_shared_state(tree, relpath)
+    return findings

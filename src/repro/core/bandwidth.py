@@ -63,7 +63,9 @@ class BucketModel:
         """
         if not sizes:
             return 0.0
-        seq = sum(self.get_seconds(s) for s in sizes)
+        seq = 0.0
+        for s in sizes:
+            seq += self.get_seconds(s)
         return seq / self.parallel_efficiency(n_connections)
 
     def list_seconds(self, n_objects: int) -> float:

@@ -195,20 +195,24 @@ class DeliLoader:
         # planner carries the epoch's ownership set — install it on the
         # shared service, whose round partition enforces it identically on
         # both projections.
+        # parity-mirror: placement-install begin planner=planner
         owned = getattr(planner, "owned", None)
         if owned is not None and self.service is not None:
             self.service.set_placement(
                 owned, in_flight=getattr(planner, "in_flight", None)
             )
+        # parity-mirror: placement-install end
         consumed = 0
         in_batch = skip % self.batch_size
         self._active_stats = stats
         for idx, round_ in planner:
             replaying = consumed < skip
+            # parity-mirror: oracle-cursor begin
             if self.oracle_view is not None:
                 # Cursor advances at access *start* (mirror of
                 # NodeSimulator._epoch_events), replayed resumes included.
                 self.oracle_view.on_consume(idx)
+            # parity-mirror: oracle-cursor end
             if round_ is not None and self.service is not None:
                 self.service.request(round_, stats=stats, replay=replaying)
             if replaying:
@@ -321,6 +325,7 @@ class DeliLoader:
         duration ``comm_s`` — the exact float operations
         ``NodeSimulator.sync_to`` performs, in the same order
         (``clock.sleep`` is the same ``+=`` the simulator applies)."""
+        # parity-mirror: sync-to begin clock=self.clock stats=self._active_stats
         wait = t - self.clock.now()
         if wait > 0:
             if self._active_stats is not None:
@@ -330,6 +335,7 @@ class DeliLoader:
             if self._active_stats is not None:
                 self._active_stats.allreduce_comm_seconds += comm_s
             self.clock.sleep(comm_s)
+        # parity-mirror: sync-to end
 
     def __len__(self) -> int:
         n = len(self.sampler)

@@ -35,7 +35,7 @@ from __future__ import annotations
 import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor, TimeoutError as FutureTimeout
-from typing import TYPE_CHECKING, List, Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 from repro.core.cache import CappedCache
 from repro.core.clock import Clock

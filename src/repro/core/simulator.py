@@ -73,7 +73,7 @@ from repro.core.lockstep import (
 )
 from repro.core.policy import PrefetchConfig, PrefetchPlanner
 from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler, Sampler
-from repro.core.types import EpochStats, StoreStats
+from repro.core.types import EpochStats, StoreStats, sequential_sum
 from repro.core.workloads import WorkloadSpec
 from repro.engine.kernels import DemandKernel
 
@@ -311,6 +311,7 @@ class NodeSimulator:
                 self.network, spec.n_nodes
             )
             if cfg.overlap == "buckets":
+                # parity-mirror: overlap-build begin mode=call-shape callee=BucketedBatchComm
                 self._overlap = BucketedBatchComm(
                     now=lambda: self.t,
                     charge=self._charge,
@@ -321,6 +322,7 @@ class NodeSimulator:
                     ),
                     n_buckets=cfg.collective.n_buckets,
                 )
+                # parity-mirror: overlap-build end
         # THE per-sample cost arithmetic (repro.engine.kernels), shared by
         # this scalar stepper, the sub-step machine, the vector engine and
         # DeliLoader's runtime mirror.  Precomputed from the *scaled*
@@ -427,6 +429,7 @@ class NodeSimulator:
             peer_lookup = lambda idx: peer_probe_payload(  # noqa: E731
                 self.registry, self.node_id, idx
             )
+        # parity-mirror: substep-build begin mode=call-shape callee=SubstepAccess
         return SubstepAccess(
             now=lambda: self.t,
             charge=self._charge,
@@ -438,6 +441,7 @@ class NodeSimulator:
             kernel=self.kernel,
             insert_on_miss=self._insert_on_miss,
         )
+        # parity-mirror: substep-build end
 
     def attach_placement(self, placement) -> None:
         """Install the cluster-wide placement planner
@@ -584,11 +588,13 @@ class NodeSimulator:
         # Mirrored line (DeliLoader._sample_steps): a placement planner
         # carries the epoch's ownership set — install it on the shared
         # service, whose round partition enforces it on both projections.
+        # parity-mirror: placement-install begin planner=self._planner
         owned = getattr(self._planner, "owned", None)
         if owned is not None and self.service is not None:
             self.service.set_placement(
                 owned, in_flight=getattr(self._planner, "in_flight", None)
             )
+        # parity-mirror: placement-install end
         self._planner_iter = iter(self._planner)
         self._samples_in_batch = 0
         self._events = self._epoch_events(self._build_substep())
@@ -604,11 +610,13 @@ class NodeSimulator:
         stats = self._stats
         assert stats is not None and self._planner_iter is not None
         for idx, round_ in self._planner_iter:
+            # parity-mirror: oracle-cursor begin
             if self.oracle_view is not None:
                 # Cursor advances at access *start* (mirrored line in
                 # DeliLoader._sample_steps): a just-consumed key competes
                 # for cache space on its NEXT occurrence.
                 self.oracle_view.on_consume(idx)
+            # parity-mirror: oracle-cursor end
             if round_ is not None:
                 assert self.service is not None
                 self.service.issue(list(round_), now=self.t, stats=stats)
@@ -646,6 +654,7 @@ class NodeSimulator:
         leaves the barrier together at ``t + comm_s``.  Called by the
         cluster scheduler for every parked node under ``sync="batch"``,
         and (wait-only) for the epoch barrier of that schedule."""
+        # parity-mirror: sync-to begin clock=self.t stats=self._stats
         wait = t - self.t
         if wait > 0:
             if self._stats is not None:
@@ -655,6 +664,7 @@ class NodeSimulator:
             if self._stats is not None:
                 self._stats.allreduce_comm_seconds += comm_s
             self.t += comm_s
+        # parity-mirror: sync-to end
 
     def finish_epoch(self) -> EpochStats:
         assert self._stats is not None
@@ -883,9 +893,9 @@ def simulate_cluster(
 
 def mean_miss_rate(stats: List[EpochStats], epoch: int) -> float:
     rows = [s for s in stats if s.epoch == epoch]
-    return sum(r.miss_rate for r in rows) / len(rows)
+    return sequential_sum(r.miss_rate for r in rows) / len(rows)
 
 
 def mean_data_wait(stats: List[EpochStats], epoch: int) -> float:
     rows = [s for s in stats if s.epoch == epoch]
-    return sum(r.data_wait_seconds for r in rows) / len(rows)
+    return sequential_sum(r.data_wait_seconds for r in rows) / len(rows)

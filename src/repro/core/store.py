@@ -27,7 +27,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.bandwidth import BucketModel, DiskModel
 from repro.core.clock import Clock, RealClock
-from repro.core.types import SampleKey, StoreStats
+from repro.core.types import StoreStats
 
 
 class StoreError(RuntimeError):

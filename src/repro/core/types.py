@@ -181,6 +181,20 @@ def aggregate_tier_hits(stats: Iterable["EpochStats"]) -> Dict[str, int]:
     return out
 
 
+def sequential_sum(values: Iterable[float]) -> float:
+    """Left-to-right float accumulation, spelled out.
+
+    The parity contract forbids leaning on a fold whose order is an
+    implementation detail (builtin ``sum`` happens to be sequential,
+    ``np.sum`` is pairwise) — every float reduction in the sim domain uses
+    this explicit chain, the scalar twin of ``np.cumsum(xs)[-1]``
+    (see repro/engine/vector.py)."""
+    total = 0.0
+    for v in values:
+        total += v
+    return total
+
+
 @dataclasses.dataclass
 class RunStats:
     """Aggregate over epochs/nodes; what benchmarks report."""
@@ -193,11 +207,15 @@ class RunStats:
 
     def mean_miss_rate(self, e: int) -> float:
         rows = self.epoch(e)
-        return sum(r.miss_rate for r in rows) / len(rows) if rows else 0.0
+        return sequential_sum(r.miss_rate for r in rows) / len(rows) if rows else 0.0
 
     def mean_data_wait(self, e: int) -> float:
         rows = self.epoch(e)
-        return sum(r.data_wait_seconds for r in rows) / len(rows) if rows else 0.0
+        return (
+            sequential_sum(r.data_wait_seconds for r in rows) / len(rows)
+            if rows
+            else 0.0
+        )
 
     def total_data_wait(self) -> float:
-        return sum(r.data_wait_seconds for r in self.epochs)
+        return sequential_sum(r.data_wait_seconds for r in self.epochs)

@@ -15,7 +15,6 @@ training-loop tests assemble their node pipelines through
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import numpy as np

@@ -18,7 +18,7 @@ lower.  The roofline report calls out where this costs performance.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

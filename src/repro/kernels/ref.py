@@ -29,8 +29,6 @@ def ssd_scan(x, dt, A, Bm, Cm, D):
         D.astype(jnp.float32),
     )
     # final state: recompute by stepping (oracle-grade, O(S))
-    import jax
-
     B, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G

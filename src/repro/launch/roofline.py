@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.launch.mesh import HardwareSpec, TPU_V5E
 from repro.models.config import ArchConfig, ShapeConfig

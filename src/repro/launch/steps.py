@@ -7,8 +7,7 @@ ShapeDtypeStruct stand-ins.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ Entry points (all pure functions over plain dict pytrees):
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -524,6 +524,7 @@ class RuntimeCluster:
                     node_network, w.n_nodes
                 )
                 if spec.overlap == "buckets":
+                    # parity-mirror: overlap-build begin mode=call-shape callee=BucketedBatchComm
                     overlap_pipe = BucketedBatchComm(
                         now=node_clock.now,
                         charge=node_clock.sleep,
@@ -534,6 +535,7 @@ class RuntimeCluster:
                         ),
                         n_buckets=spec.collective.n_buckets,
                     )
+                    # parity-mirror: overlap-build end
             self.allreduces.append(allreduce_s)
             self.overlaps.append(overlap_pipe)
             bucket: Optional[SimulatedBucketStore] = None
@@ -715,6 +717,7 @@ class RuntimeCluster:
             peer_lookup = lambda idx: peer_probe_payload(  # noqa: E731
                 self.registry, rank, idx
             )
+        # parity-mirror: substep-build begin mode=call-shape callee=SubstepAccess
         return SubstepAccess(
             now=clock.now,
             charge=clock.sleep,
@@ -733,6 +736,7 @@ class RuntimeCluster:
             ),
             insert_on_miss=insert_on_miss,
         )
+        # parity-mirror: substep-build end
 
     # -- lifecycle ------------------------------------------------------------
     def close(self) -> None:

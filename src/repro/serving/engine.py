@@ -9,7 +9,7 @@ integration tests).  Weights can also be streamed from a DELI pipeline
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ from repro.core import (
     simulate_cluster,
     straggler_profiles,
 )
-from repro.core.lockstep import STEP_BATCH_END, drive_interleaved_epoch
+from repro.core.lockstep import drive_interleaved_epoch
 from repro.core.simulator import NodeSimulator
 from repro.core.types import aggregate_tier_hits
 from repro.core.workloads import WorkloadSpec

@@ -13,10 +13,8 @@ from repro.core import (
     PrefetchService,
     RealClock,
     ReliableStore,
-    SequentialSampler,
     SimulatedBucketStore,
     StoreError,
-    make_synthetic_payloads,
     run_epochs,
 )
 

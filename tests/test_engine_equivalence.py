@@ -167,7 +167,7 @@ def test_vector_engine_actually_engages():
     assert vcfg.engine == "vector"
     # The cluster driver picks the engine class per run; probe it the same
     # way simulate_cluster does.
-    from repro.core.simulator import NodeSimulator, simulate_cluster
+    from repro.core.simulator import NodeSimulator
 
     assert issubclass(VectorNodeEngine, NodeSimulator)
     stats, _ = cluster.run(epochs=1)

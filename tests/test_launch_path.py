@@ -2,7 +2,6 @@
 input_specs + jit lowering work end to end for reduced configs on a 1x1
 mesh.  (The full 512-device production meshes are exercised by
 launch/dryrun.py, which must own the process to set XLA_FLAGS first.)"""
-import dataclasses
 
 import jax
 import pytest

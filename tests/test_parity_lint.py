@@ -1,0 +1,327 @@
+"""Negative fixtures for the parity linter (src/repro/analysis/).
+
+Each rule is demonstrated to FIRE on a deliberately-broken snippet with
+the right rule id, location, and hint — the acceptance criterion for
+ISSUE 9 — plus the positive twin: the same snippet, repaired, passes.
+Fixtures are synthetic sources checked under fake sim-domain/test paths;
+nothing here touches the real tree (tests/test_tools.py holds the
+repo-level gate checks).
+"""
+import pathlib
+import textwrap
+
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.mirrors import check_mirrors, scan_mirror_regions
+from repro.analysis.rules import run_rules_on_source
+
+
+def _write(tmp_path: pathlib.Path, name: str, source: str) -> pathlib.Path:
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return p
+
+
+def _scan_mirrors(tmp_path, sources):
+    regions, findings = [], []
+    for name, src in sources.items():
+        p = _write(tmp_path, name.replace("/", "_"), src)
+        rs, fs = scan_mirror_regions(p, name)
+        regions += rs
+        findings += fs
+    return findings + check_mirrors(regions)
+
+
+# -- PL001 mirror-drift ------------------------------------------------------
+_SIM_HALF = """\
+    class Sim:
+        def sync_to(self, t, comm_s=0.0):
+            # parity-mirror: sync-to begin clock=self.t stats=self._stats
+            wait = t - self.t
+            if wait > 0:
+                if self._stats is not None:
+                    self._stats.allreduce_wait_seconds += wait
+                self.t = t
+            if comm_s > 0:
+                if self._stats is not None:
+                    self._stats.allreduce_comm_seconds += comm_s
+                self.t += comm_s
+            # parity-mirror: sync-to end
+"""
+
+_LOADER_HALF_OK = """\
+    class Loader:
+        def sync_to(self, t, comm_s=0.0):
+            # parity-mirror: sync-to begin clock=self.clock stats=self._active_stats
+            wait = t - self.clock.now()
+            if wait > 0:
+                if self._active_stats is not None:
+                    self._active_stats.allreduce_wait_seconds += wait
+                self.clock.advance_to(t)
+            if comm_s > 0:
+                if self._active_stats is not None:
+                    self._active_stats.allreduce_comm_seconds += comm_s
+                self.clock.sleep(comm_s)
+            # parity-mirror: sync-to end
+"""
+
+# Drifted: the comm charge happens BEFORE the stats record — same result
+# for the clock, different stats/time interleaving, and exactly the kind
+# of reorder a human review waves through.
+_LOADER_HALF_DRIFTED = """\
+    class Loader:
+        def sync_to(self, t, comm_s=0.0):
+            # parity-mirror: sync-to begin clock=self.clock stats=self._active_stats
+            wait = t - self.clock.now()
+            if wait > 0:
+                if self._active_stats is not None:
+                    self._active_stats.allreduce_wait_seconds += wait
+                self.clock.advance_to(t)
+            if comm_s > 0:
+                self.clock.sleep(comm_s)
+                if self._active_stats is not None:
+                    self._active_stats.allreduce_comm_seconds += comm_s
+            # parity-mirror: sync-to end
+"""
+
+
+def test_mirror_equivalent_halves_pass(tmp_path):
+    findings = _scan_mirrors(
+        tmp_path, {"src/repro/core/a.py": _SIM_HALF, "src/repro/core/b.py": _LOADER_HALF_OK}
+    )
+    assert findings == []
+
+
+def test_mirror_drift_fires_with_location_and_hint(tmp_path):
+    findings = _scan_mirrors(
+        tmp_path,
+        {"src/repro/core/a.py": _SIM_HALF, "src/repro/core/b.py": _LOADER_HALF_DRIFTED},
+    )
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "mirror-drift" and f.code == "PL001"
+    assert f.symbol == "sync-to"
+    # anchored at a begin marker of one of the two declared halves
+    assert f.path in ("src/repro/core/a.py", "src/repro/core/b.py")
+    assert f.line == 3
+    assert "drifted" in f.message
+    assert "PARITY.md" in f.hint
+
+
+def test_mirror_orphan_half_fires(tmp_path):
+    findings = _scan_mirrors(tmp_path, {"src/repro/core/a.py": _SIM_HALF})
+    assert [f.rule for f in findings] == ["mirror-drift"]
+    assert "exactly two halves" in findings[0].message
+
+
+def test_mirror_unclosed_region_fires(tmp_path):
+    src = "# parity-mirror: lost begin\nx = 1\n"
+    p = _write(tmp_path, "lost.py", src)
+    _, findings = scan_mirror_regions(p, "src/repro/core/lost.py")
+    assert [f.rule for f in findings] == ["mirror-drift"]
+    assert "without end" in findings[0].message
+
+
+def test_mirror_call_shape_catches_keyword_drift(tmp_path):
+    ok = """\
+        # parity-mirror: build begin mode=call-shape callee=Machine
+        m = Machine(now=lambda: self.t, charge=self._charge, kernel=k)
+        # parity-mirror: build end
+    """
+    drifted = """\
+        # parity-mirror: build begin mode=call-shape callee=Machine
+        m = Machine(now=clock.now, charge=clock.sleep, kernel=k, extra=1)
+        # parity-mirror: build end
+    """
+    findings = _scan_mirrors(
+        tmp_path, {"src/repro/core/a.py": ok, "src/repro/core/b.py": drifted}
+    )
+    assert len(findings) == 1
+    assert findings[0].rule == "mirror-drift"
+    assert "extra" in findings[0].message
+
+    # operands may differ freely when the keyword surface agrees
+    same_shape = """\
+        # parity-mirror: build begin mode=call-shape callee=Machine
+        m = Machine(now=clock.now, charge=clock.sleep, kernel=other_kernel)
+        # parity-mirror: build end
+    """
+    assert (
+        _scan_mirrors(
+            tmp_path, {"src/repro/core/c.py": ok, "src/repro/core/d.py": same_shape}
+        )
+        == []
+    )
+
+
+def test_mirror_marker_in_docstring_is_not_a_marker(tmp_path):
+    src = '"""example: # parity-mirror: ghost begin"""\nx = 1\n'
+    p = _write(tmp_path, "doc.py", src)
+    regions, findings = scan_mirror_regions(p, "src/repro/core/doc.py")
+    assert regions == [] and findings == []
+
+
+# -- PL002 clock-discipline --------------------------------------------------
+def test_clock_discipline_fires_on_time_time():
+    src = "import time\n\ndef step(self):\n    t0 = time.time()\n    return t0\n"
+    findings = run_rules_on_source("src/repro/core/broken.py", src)
+    assert [f.rule for f in findings] == ["clock-discipline"]
+    f = findings[0]
+    assert f.code == "PL002" and f.line == 4 and f.symbol == "step"
+    assert f.key == "time.time"
+    assert "clock.now()" in f.hint
+
+
+def test_clock_discipline_fires_on_from_import_and_random():
+    src = (
+        "from time import perf_counter\n"
+        "import random\n"
+        "def jitter():\n"
+        "    return perf_counter() + random.random()\n"
+    )
+    findings = run_rules_on_source("src/repro/oracle/broken.py", src)
+    assert sorted(f.key for f in findings) == ["random.random", "time.perf_counter"]
+
+
+def test_clock_discipline_allows_seeded_rng_and_allowlist():
+    seeded = "import random\nrng = random.Random(1234)\n"
+    assert run_rules_on_source("src/repro/core/fine.py", seeded) == []
+    # the wall-clock abstraction itself is allowlisted
+    wall = "import time\n\ndef now(self):\n    return time.monotonic()\n"
+    assert run_rules_on_source("src/repro/core/clock.py", wall) == []
+    # ...but only inside the sim domain does the rule even apply
+    assert run_rules_on_source("src/repro/launch/bench.py", wall) == []
+
+
+# -- PL003 float-determinism -------------------------------------------------
+def test_float_determinism_fires_on_np_sum_time_chain():
+    src = (
+        "import numpy as np\n"
+        "def total(self, spans):\n"
+        "    self.wait_seconds = np.sum(spans)\n"
+    )
+    findings = run_rules_on_source("src/repro/engine/broken.py", src)
+    assert [f.key for f in findings] == ["np.sum"]
+    f = findings[0]
+    assert f.rule == "float-determinism" and f.code == "PL003" and f.line == 3
+    assert "cumsum" in f.hint
+
+
+def test_float_determinism_fires_on_builtin_sum_over_floats():
+    src = "def mean_wait(rows):\n    return sum(r.wait_seconds for r in rows) / len(rows)\n"
+    findings = run_rules_on_source("src/repro/core/broken.py", src)
+    assert [f.key for f in findings] == ["sum"]
+    # int counters are not the target of this rule
+    ok = "def n_hits(rows):\n    return sum(r.hits for r in rows)\n"
+    assert run_rules_on_source("src/repro/core/fine.py", ok) == []
+
+
+def test_float_determinism_fires_on_set_iteration_accumulator():
+    src = (
+        "def drain(self, keys):\n"
+        "    for k in set(keys):\n"
+        "        self.wait_seconds += self.cost(k)\n"
+    )
+    findings = run_rules_on_source("src/repro/core/broken.py", src)
+    assert [f.key for f in findings] == ["set-iteration"]
+    assert "sorted()" in findings[0].hint
+    ok = src.replace("set(keys)", "sorted(keys)")
+    assert run_rules_on_source("src/repro/core/fine.py", ok) == []
+
+
+# -- PL004 no-tolerance ------------------------------------------------------
+def test_no_tolerance_fires_on_pytest_approx_in_parity_test():
+    src = (
+        "import pytest\n"
+        "from repro.pipeline.parity import assert_parity\n"
+        "def test_sim_matches_runtime(sim, rt):\n"
+        "    assert sim.t == pytest.approx(rt.clock.now())\n"
+    )
+    findings = run_rules_on_source("tests/test_broken.py", src)
+    assert [f.key for f in findings] == ["pytest.approx"]
+    f = findings[0]
+    assert f.rule == "no-tolerance" and f.code == "PL004" and f.line == 4
+    assert "exact ==" in f.message and "baselined exception" in f.hint
+
+
+def test_no_tolerance_fires_on_isclose_and_abs_eps():
+    src = (
+        "import math\n"
+        "def test_parity_epoch(a, b, eps):\n"
+        "    assert math.isclose(a, b)\n"
+        "    assert abs(a - b) < 1e-9\n"
+        "    assert abs(a - b) < eps\n"
+    )
+    # parity-named file: in scope even without the assert_parity import
+    findings = run_rules_on_source("tests/test_parity_broken.py", src)
+    assert [f.key for f in findings] == ["math.isclose", "abs<eps", "abs<eps"]
+
+
+def test_no_tolerance_ignores_non_parity_tests():
+    src = "import pytest\ndef test_cost_model(x):\n    assert x == pytest.approx(1.5)\n"
+    assert run_rules_on_source("tests/test_costs.py", src) == []
+
+
+# -- PL005 shared-state ------------------------------------------------------
+def test_shared_state_fires_outside_lockstep():
+    src = (
+        "class Planner:\n"
+        "    def on_issue(self, keys):\n"
+        "        self.in_flight.update(keys)\n"
+        "    def on_done(self, k):\n"
+        "        self.in_flight.discard(k)\n"
+    )
+    findings = run_rules_on_source("src/repro/oracle/placement_broken.py", src)
+    assert [f.key for f in findings] == [".update", ".discard"]
+    f = findings[0]
+    assert f.rule == "shared-state" and f.code == "PL005"
+    assert f.symbol == "Planner.on_issue"
+    assert "lockstep" in f.hint
+
+
+def test_shared_state_allows_lockstep_home_and_wiring():
+    src = "class S:\n    def issue(self, keys):\n        self._in_flight.update(keys)\n"
+    assert run_rules_on_source("src/repro/core/lockstep.py", src) == []
+    # plain rebinding (wiring the shared set into a view) is fine anywhere
+    wiring = "class V:\n    def attach(self, shared):\n        self.in_flight = shared\n"
+    assert run_rules_on_source("src/repro/oracle/view.py", wiring) == []
+
+
+# -- baseline mechanics ------------------------------------------------------
+def _finding(**kw):
+    base = dict(
+        rule="no-tolerance",
+        path="tests/test_x.py",
+        line=10,
+        symbol="test_a",
+        key="pytest.approx",
+        message="m",
+        hint="h",
+    )
+    base.update(kw)
+    return Finding(**base)
+
+
+def test_baseline_count_budget_and_staleness():
+    baseline = Baseline(
+        [
+            {
+                "rule": "no-tolerance",
+                "path": "tests/test_x.py",
+                "symbol": "test_a",
+                "key": "pytest.approx",
+                "count": 2,
+                "reason": "closed-form pin",
+            }
+        ]
+    )
+    # two covered (line numbers irrelevant), a third is new
+    new, stale = baseline.filter([_finding(line=1), _finding(line=99)])
+    assert new == [] and stale == []
+    new, stale = baseline.filter([_finding(line=1), _finding(line=2), _finding(line=3)])
+    assert len(new) == 1 and stale == []
+    # unused budget is reported stale
+    new, stale = baseline.filter([_finding(line=1)])
+    assert new == [] and len(stale) == 1 and stale[0]["unused"] == 1
+    # a different symbol is not covered
+    new, _ = baseline.filter([_finding(symbol="test_b")])
+    assert len(new) == 1

@@ -10,7 +10,6 @@ from repro.core import (
     DistributedPartitionSampler,
     GcpPrices,
     LocalityAwareSampler,
-    NetworkModel,
     PrefetchConfig,
     PrefetchService,
     SimConfig,
@@ -19,7 +18,6 @@ from repro.core import (
     WorkloadCostInputs,
     cost_bucket,
     cost_with_peer_cache,
-    make_synthetic_payloads,
     mean_data_wait,
     simulate_cluster,
 )

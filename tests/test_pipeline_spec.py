@@ -16,7 +16,6 @@ from repro.core import (
     StoreError,
     VirtualClock,
     aggregate_tier_hits,
-    make_synthetic_payloads,
 )
 from repro.distributed import PeerCacheRegistry, PeerStore
 from repro.pipeline import (
@@ -30,7 +29,6 @@ from repro.pipeline import (
     condition,
     list_conditions,
     list_samplers,
-    run_parity,
     tiers_for_store,
 )
 

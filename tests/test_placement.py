@@ -22,7 +22,6 @@ from repro.core.bandwidth import DEFAULT_BUCKET, DEFAULT_PIPELINE
 from repro.core.sampler import SharedShuffleSampler
 from repro.core.types import SampleKey
 from repro.oracle import (
-    NEVER,
     ClusterPlacementPlanner,
     NodeAccessView,
     OraclePrefetchPlanner,

@@ -1,7 +1,5 @@
 """Sharding rules: property tests (hypothesis) for the divisibility-aware
 PartitionSpec construction, plus per-arch full-config spec validity."""
-import jax
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
@@ -12,9 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro import configs
 from repro.distributed.sharding import (
     ShardingRules,
-    batch_spec,
     kv_cache_spec,
-    param_shardings,
     ssm_state_spec,
 )
 from repro.launch.mesh import make_smoke_mesh

@@ -1,0 +1,176 @@
+"""Tools-level coverage: tools/check_docs_links.py unit paths (previously
+untested) and the repo-level parity-lint gate self-checks — the real tree
+scans clean against the committed baseline, every declared mirror pair
+verifies, and the baseline never hides a mirror-drift finding.
+"""
+import importlib.util
+import json
+import pathlib
+
+from repro.analysis.cli import main as lint_main
+from repro.analysis.cli import run_analysis
+from repro.analysis.findings import Baseline
+from repro.analysis.mirrors import check_mirrors, scan_mirror_regions
+from repro.core.types import EpochStats, RunStats, sequential_sum
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = REPO / "tools" / "parity_lint_baseline.json"
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", REPO / "tools" / "check_docs_links.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# -- check_docs_links: target extraction -------------------------------------
+def test_targets_skips_external_links_and_pure_anchors():
+    cdl = _load_checker()
+    text = (
+        "[paper](https://arxiv.org/abs/2108.06322) "
+        "[mail](mailto:x@y.z) [sec](#parity) [real](PARITY.md)"
+    )
+    assert list(cdl.targets_in(text)) == [("PARITY.md", "link")]
+
+
+def test_targets_strips_anchor_from_file_links():
+    cdl = _load_checker()
+    assert list(cdl.targets_in("[s](ARCHITECTURE.md#layer-map)")) == [
+        ("ARCHITECTURE.md", "link")
+    ]
+
+
+def test_targets_code_paths_need_path_suffix():
+    cdl = _load_checker()
+    # dotted module names and extension-less pseudo-paths stay prose
+    text = "`src/repro/core/loader.py` and `repro.pipeline` and `a/b`"
+    assert list(cdl.targets_in(text)) == [
+        ("src/repro/core/loader.py", "code-path"),
+    ]
+
+
+# -- check_docs_links: resolution against a tmp tree -------------------------
+def _tmp_repo(tmp_path, readme: str, extra=()):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(readme)
+    for rel in extra:
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("x")
+    return tmp_path
+
+
+def test_check_reports_missing_file(tmp_path, monkeypatch):
+    cdl = _load_checker()
+    monkeypatch.setattr(cdl, "REPO", _tmp_repo(tmp_path, "[gone](missing.md)"))
+    broken = cdl.check()
+    assert len(broken) == 1
+    assert "missing.md" in broken[0] and "README.md" in broken[0]
+
+
+def test_check_resolves_relative_links_and_repo_relative_code_paths(
+    tmp_path, monkeypatch
+):
+    cdl = _load_checker()
+    readme = "[d](docs/GUIDE.md) and `src/mod.py` and [ext](https://x.y) and [a](#top)"
+    monkeypatch.setattr(
+        cdl, "REPO", _tmp_repo(tmp_path, readme, extra=["docs/GUIDE.md", "src/mod.py"])
+    )
+    assert cdl.check() == []
+    # code-paths resolve repo-relative even when mentioned inside docs/
+    (tmp_path / "docs" / "GUIDE.md").write_text("`src/mod.py` `src/nope.py`")
+    broken = cdl.check()
+    assert len(broken) == 1 and "src/nope.py" in broken[0]
+
+
+def test_check_flags_absolute_paths(tmp_path, monkeypatch):
+    cdl = _load_checker()
+    monkeypatch.setattr(cdl, "REPO", _tmp_repo(tmp_path, "[abs](/etc/hosts)"))
+    broken = cdl.check()
+    assert len(broken) == 1 and "absolute path" in broken[0]
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    cdl = _load_checker()
+    monkeypatch.setattr(cdl, "REPO", _tmp_repo(tmp_path, "[ok](docs/)"))
+    assert cdl.main() == 0
+    (tmp_path / "README.md").write_text("[gone](missing.md)")
+    assert cdl.main() == 1
+    assert "BROKEN" in capsys.readouterr().err
+
+
+# -- parity-lint: the real tree ----------------------------------------------
+def test_repo_scans_clean_against_committed_baseline():
+    findings = run_analysis(REPO)
+    new, _stale = Baseline.load(BASELINE).filter(findings)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_cli_gate_exits_zero_on_repo():
+    assert lint_main(["--root", str(REPO), "--baseline", str(BASELINE)]) == 0
+
+
+def test_all_declared_mirror_pairs_verify():
+    regions = []
+    for sub in ("src", "tests", "tools"):
+        for path in sorted((REPO / sub).rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            rs, fs = scan_mirror_regions(path, path.relative_to(REPO).as_posix())
+            regions += rs
+            assert fs == []
+    names = sorted({r.name for r in regions})
+    # the five pairs ISSUE 9 annotates; each must have exactly two halves
+    assert names == [
+        "oracle-cursor",
+        "overlap-build",
+        "placement-install",
+        "substep-build",
+        "sync-to",
+    ]
+    for name in names:
+        assert sum(1 for r in regions if r.name == name) == 2, name
+    assert check_mirrors(regions) == []
+
+
+def test_baseline_contains_no_mirror_drift_entries():
+    # CI self-check (ISSUE 9): mirror drift can never be baselined away —
+    # a drifted mirror is always a build failure, not an accepted exception.
+    data = json.loads(BASELINE.read_text())
+    assert data["entries"], "baseline exists and documents its exceptions"
+    assert all(e["rule"] != "mirror-drift" for e in data["entries"])
+    assert all(e.get("reason") for e in data["entries"])
+
+
+# -- pins for the PL003 fixes ------------------------------------------------
+def test_sequential_sum_matches_left_to_right_fold():
+    xs = [0.1, 0.2, 0.3, 1e-9, 7.7, 0.1]
+    acc = 0.0
+    for x in xs:
+        acc += x
+    assert sequential_sum(xs) == acc
+    assert sequential_sum([]) == 0.0
+
+
+def test_run_stats_means_are_sequential_folds():
+    rows = []
+    for n, (h, w) in enumerate(zip([3, 7, 5], [0.1, 0.25, 1e-9])):
+        r = EpochStats(epoch=0, node=n, samples=10)
+        r.record("ram", h)
+        r.record("bucket", 10 - h)
+        r.data_wait_seconds = w
+        rows.append(r)
+    stats = RunStats(epochs=rows)
+    acc_mr = 0.0
+    for r in rows:
+        acc_mr += r.miss_rate
+    acc_w = 0.0
+    for r in rows:
+        acc_w += r.data_wait_seconds
+    assert stats.mean_miss_rate(0) == acc_mr / 3
+    assert stats.mean_data_wait(0) == acc_w / 3
+    assert stats.total_data_wait() == acc_w
+    assert RunStats(epochs=[]).mean_miss_rate(0) == 0.0
