@@ -95,6 +95,29 @@ def check(label: str, ok: bool, detail: str) -> Tuple[str, bool, str]:
     return (label, bool(ok), detail)
 
 
+def dump_trace(plane: DataPlaneSpec, untraced_stats, path, epochs: int = 2):
+    """Re-run one condition with the flight recorder on and export the
+    Chrome trace (``--trace-dir``).
+
+    Returns ``(identical, n_events)`` where ``identical`` is the ISSUE 10
+    observer claim, checked with ``==``: the traced rerun's EpochStats are
+    byte-identical to the untraced run the benchmark already measured —
+    tracing observes the schedule, never perturbs it.
+    """
+    from repro.obs.events import TraceRecorder
+    from repro.obs.export import write_chrome_trace
+
+    rec = TraceRecorder()
+    traced_stats, _ = dataclasses.replace(plane, trace=rec).build_sim().run(
+        epochs=epochs
+    )
+    write_chrome_trace(str(path), rec.events)
+    identical = [s.asdict() for s in traced_stats] == [
+        s.asdict() for s in untraced_stats
+    ]
+    return identical, len(rec.events)
+
+
 def fmt_table(headers: List[str], rows: List[List]) -> str:
     widths = [
         max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))

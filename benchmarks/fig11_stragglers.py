@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import check, fmt_table, run_spec
+from benchmarks.common import check, dump_trace, fmt_table, run_spec
 from repro.core import MNIST, PrefetchConfig, straggler_profiles
 from repro.pipeline import DataPlaneSpec
 
@@ -68,18 +68,34 @@ def _per_node(stats):
     busy, wall, allreduce = {}, {}, {}
     for s in stats:
         busy[s.node] = busy.get(s.node, 0.0) + s.data_wait_seconds + s.compute_seconds
-        wall[s.node] = wall.get(s.node, 0.0) + s.wall_clock_seconds
+        wall[s.node] = wall.get(s.node, 0.0) + s.wall_seconds
         allreduce[s.node] = allreduce.get(s.node, 0.0) + s.allreduce_wait_seconds
     return busy, wall, allreduce
 
 
-def run(fast: bool = False) -> dict:
-    rows, checks = [], []
+def run(fast: bool = False, trace_dir=None) -> dict:
+    rows, checks, traces = [], [], []
     w, conditions = _conditions(fast)
     for tag, base in conditions:
         results = {}
         for sync in ("epoch", "batch"):
             r = run_spec(dataclasses.replace(base, sync=sync), epochs=2)
+            if trace_dir is not None and tag == "peer + 50/50 pf" and sync == "batch":
+                # Headline condition: flight-recorder dump + the observer
+                # claim (traced rerun's stats byte-identical, ISSUE 10).
+                path = trace_dir / "fig11.trace.json"
+                same, n_events = dump_trace(
+                    dataclasses.replace(base, sync=sync), r["stats"], path
+                )
+                traces.append(path)
+                checks.append(
+                    check(
+                        "fig11/trace-on-stats-identical",
+                        same,
+                        f"{n_events} events -> {path.name}; "
+                        "traced EpochStats == untraced",
+                    )
+                )
             busy, wall, allreduce = _per_node(r["stats"])
             results[sync] = dict(
                 r=r, busy=busy, wall=wall, allreduce=allreduce,
@@ -186,6 +202,7 @@ def run(fast: bool = False) -> dict:
         ),
         "rows": rows,
         "checks": checks,
+        "traces": traces,
         "notes": (
             "4-node MNIST-scale cluster, rank 0 slowed 2x in compute AND I/O "
             "(NodeProfile). sync='batch' parks every node at each gradient "

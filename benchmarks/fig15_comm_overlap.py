@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import check, fmt_table, run_spec
+from benchmarks.common import check, dump_trace, fmt_table, run_spec
 from repro.core import MNIST, CollectiveModel, mnist_cnn_gradient_bytes, straggler_profiles
 from repro.pipeline import DataPlaneSpec, run_parity
 
@@ -91,18 +91,32 @@ def _conditions(fast: bool):
 def _totals(stats):
     comm = sum(s.allreduce_comm_seconds for s in stats)
     wait = sum(s.allreduce_wait_seconds for s in stats)
-    wall = max(s.wall_clock_seconds for s in stats)
+    wall = max(s.wall_seconds for s in stats)
     slow_comm = sum(s.allreduce_comm_seconds for s in stats if s.node == SLOW_RANK)
     return comm, wait, wall, slow_comm
 
 
-def run(fast: bool = False) -> dict:
-    rows, checks = [], []
+def run(fast: bool = False, trace_dir=None) -> dict:
+    rows, checks, traces = [], [], []
     w, regimes = _conditions(fast)
     for regime, grad, conditions in regimes:
         results = {}
         for tag, spec in conditions:
             r = run_spec(spec, epochs=2)
+            if trace_dir is not None and regime == "lm-130m" and tag == "+overlap":
+                # Headline condition (comm-bound regime with bucket
+                # overlap): flight-recorder dump + the observer claim.
+                path = trace_dir / "fig15.trace.json"
+                same, n_events = dump_trace(spec, r["stats"], path)
+                traces.append(path)
+                checks.append(
+                    check(
+                        "fig15/trace-on-stats-identical",
+                        same,
+                        f"{n_events} events -> {path.name}; "
+                        "traced EpochStats == untraced",
+                    )
+                )
             comm, wait, wall, slow_comm = _totals(r["stats"])
             results[tag] = dict(
                 r=r, comm=comm, wait=wait, wall=wall, slow_comm=slow_comm, spec=spec
@@ -127,8 +141,8 @@ def run(fast: bool = False) -> dict:
                 f"({hidden:.1%} hidden behind backprop)",
             )
         )
-        n_walls = sorted(s.wall_clock_seconds for s in none["r"]["stats"])
-        o_walls = sorted(s.wall_clock_seconds for s in ovl["r"]["stats"])
+        n_walls = sorted(s.wall_seconds for s in none["r"]["stats"])
+        o_walls = sorted(s.wall_seconds for s in ovl["r"]["stats"])
         checks.append(
             check(
                 f"fig15/{regime}/overlap-wall-never-worse",
@@ -175,6 +189,7 @@ def run(fast: bool = False) -> dict:
         ),
         "rows": rows,
         "checks": checks,
+        "traces": traces,
         "notes": (
             "fig11's 4-node straggler cluster with the collective itself "
             "modeled: ring allreduce over the Table-I-calibrated network, "

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import pathlib
 import sys
@@ -38,14 +39,30 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="10%% datasets, 1 trial")
     ap.add_argument("--only", default="", help="comma list of module names")
+    ap.add_argument(
+        "--trace-dir",
+        default="",
+        metavar="DIR",
+        help="dump a Chrome trace (flight recorder, repro.obs) of each "
+        "figure's headline condition into DIR; modules without trace "
+        "support run untraced",
+    )
     args = ap.parse_args(argv)
+    trace_dir = pathlib.Path(args.trace_dir) if args.trace_dir else None
+    if trace_dir is not None:
+        trace_dir.mkdir(parents=True, exist_ok=True)
 
     names = [m for m in MODULES if not args.only or m in args.only.split(",")]
     all_checks, summary = [], {}
     for name in names:
         mod = importlib.import_module(f"benchmarks.{name}")
+        kwargs = {}
+        if trace_dir is not None and "trace_dir" in inspect.signature(
+            mod.run
+        ).parameters:
+            kwargs["trace_dir"] = trace_dir
         t0 = time.time()
-        res = mod.run(fast=args.fast)
+        res = mod.run(fast=args.fast, **kwargs)
         dt = time.time() - t0
         print(f"\n=== {res['name']}  [{name}, {dt:.1f}s] ===")
         print(res["table"])
@@ -56,6 +73,8 @@ def main(argv=None):
             "name": res["name"],
             "seconds": round(dt, 1),
             "engine": res.get("engine", "scalar"),
+            "traced": bool(kwargs),
+            "traces": [str(p) for p in res.get("traces", [])],
             "checks": [
                 {"label": l, "ok": o, "detail": d} for l, o, d in res["checks"]
             ],

@@ -51,6 +51,17 @@ convention into a rule that fails CI when it drifts:
     at bit-identical virtual times.  Wiring assignments are fine; a new
     ``.add``/``.discard``/``.update`` site anywhere else is flagged.
 
+``observer-purity`` (PL006)
+    The flight recorder (``repro/obs/``, ISSUE 10) observes the lock-step
+    schedule and must never perturb it: obs-package code may not call
+    data-plane mutators (``.put``/``.record``/``.advance_to``/…) or
+    accumulate into stats fields, and mirrored ``# parity-mirror``
+    regions may not contain raw recorder calls (``.emit`` /
+    ``trace_emit`` / ``trace_demand``) — the ONE sanctioned in-mirror
+    emission is the shared ``trace_sync`` helper, whose span
+    reconstruction lives outside the mirror.  This is what makes
+    ``trace=None`` byte-identical to an untraced run.
+
 Run it: ``python -m repro.analysis [--baseline tools/parity_lint_baseline
 .json]`` — exit 0 when every finding is baselined, 1 otherwise.  CI runs
 it as the named ``parity-lint`` step in ``.github/workflows/smoke.yml``.

@@ -30,6 +30,7 @@ RULE_CODES = {
     "float-determinism": "PL003",
     "no-tolerance": "PL004",
     "shared-state": "PL005",
+    "observer-purity": "PL006",
 }
 
 

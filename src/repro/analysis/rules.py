@@ -465,9 +465,149 @@ def check_shared_state(tree: ast.AST, relpath: str) -> List[Finding]:
     return v.findings
 
 
+# -- PL006 observer-purity ---------------------------------------------------
+#: The flight-recorder package: may observe everything, mutate nothing.
+OBS_PREFIX = "src/repro/obs/"
+
+#: Data-plane mutators the recorder must never call (ISSUE 10: with
+#: ``trace=None`` every stat, schedule and parity fingerprint is
+#: byte-identical — impossible if observer code can reach these).
+_OBS_MUTATORS = {
+    "put",
+    "record",
+    "advance_to",
+    "advance",
+    "sleep",
+    "issue",
+    "request",
+    "set_placement",
+    "set_residency_listener",
+    "set_trace_listener",
+    "fold_inserts_until",
+    "bill_demand_gets",
+    "note_miss",
+}
+#: Stats-object fields observer code must not accumulate into.
+_STAT_FIELD_RE = re.compile(
+    r"(_seconds|_requests)$|^(samples|hits|misses|evictions|bytes_read)$"
+)
+_OBS_HINT = (
+    "code under src/repro/obs/ is an observer of the lock-step schedule: "
+    "it may read state and emit events, never drive clocks, caches, "
+    "services or stats — move the mutation to the host component and "
+    "have it call into the recorder instead"
+)
+
+
+class _ObserverPurity(_SymbolStack):
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in _OBS_MUTATORS:
+            self.emit(
+                "observer-purity",
+                node,
+                f".{fn.attr}",
+                f"recorder-side call to data-plane mutator .{fn.attr}() — "
+                "the flight recorder is observe-only",
+                _OBS_HINT,
+            )
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.target, ast.Attribute) and _STAT_FIELD_RE.search(
+            node.target.attr
+        ):
+            self.emit(
+                "observer-purity",
+                node,
+                f"augassign:{node.target.attr}",
+                f"recorder-side accumulation into stats field "
+                f".{node.target.attr} — the flight recorder is observe-only",
+                _OBS_HINT,
+            )
+        self.generic_visit(node)
+
+
+def check_observer_purity(tree: ast.AST, relpath: str) -> List[Finding]:
+    v = _ObserverPurity(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+#: Recorder entry points banned inside mirror regions (the one sanctioned
+#: helper is ``trace_sync`` — reconstruction happens outside the mirror).
+_MIRROR_BANNED_HELPERS = {"trace_emit", "trace_demand"}
+_MIRROR_EMIT_HINT = (
+    "mirrored regions must stay textually identical under role "
+    "normalization; raw recorder calls drag projection-specific spellings "
+    "into the mirror — route the emission through the ONE shared helper "
+    "(trace_sync in repro.obs.events) or move it outside the region"
+)
+
+
+def _mirror_spans(source: str):
+    """(begin_line, end_line, name) for every marked region, tolerant of
+    marker errors (those are PL001 findings, not ours)."""
+    from repro.analysis.mirrors import _marker_lines
+
+    spans = []
+    open_marker = None  # (line, name)
+    markers = _marker_lines(source)
+    for lineno in sorted(markers):
+        m = markers[lineno]
+        if m.group("kind") == "begin":
+            open_marker = (lineno, m.group("name"))
+        elif open_marker is not None:
+            spans.append((open_marker[0], lineno, open_marker[1]))
+            open_marker = None
+    return spans
+
+
+def check_mirror_region_emits(
+    tree: ast.AST, relpath: str, source: str
+) -> List[Finding]:
+    spans = _mirror_spans(source)
+    if not spans:
+        return []
+    findings: List[Finding] = []
+
+    def region_of(lineno: int) -> Optional[str]:
+        for lo, hi, name in spans:
+            if lo < lineno < hi:
+                return name
+        return None
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = region_of(getattr(node, "lineno", 0))
+        if name is None:
+            continue
+        fn = node.func
+        key: Optional[str] = None
+        if isinstance(fn, ast.Attribute) and fn.attr == "emit":
+            key = ".emit"
+        elif isinstance(fn, ast.Name) and fn.id in _MIRROR_BANNED_HELPERS:
+            key = fn.id
+        if key is not None:
+            findings.append(
+                Finding(
+                    rule="observer-purity",
+                    path=relpath,
+                    line=node.lineno,
+                    symbol=name,
+                    key=key,
+                    message=f"raw recorder call {key} inside parity-mirror "
+                    f"region {name!r}",
+                    hint=_MIRROR_EMIT_HINT,
+                )
+            )
+    return findings
+
+
 # -- dispatch ---------------------------------------------------------------
 def run_rules_on_source(relpath: str, source: str) -> List[Finding]:
-    """All path-scoped rules (PL002–PL005) for one file.
+    """All path-scoped rules (PL002–PL006) for one file.
 
     PL001 needs cross-file pairing and runs separately (``mirrors``).
     """
@@ -495,4 +635,8 @@ def run_rules_on_source(relpath: str, source: str) -> List[Finding]:
         findings += check_no_tolerance(tree, relpath)
     if relpath.startswith("src/repro/") and relpath != SHARED_STATE_HOME:
         findings += check_shared_state(tree, relpath)
+    if relpath.startswith(OBS_PREFIX):
+        findings += check_observer_purity(tree, relpath)
+    if relpath.startswith("src/repro/"):
+        findings += check_mirror_region_emits(tree, relpath, source)
     return findings

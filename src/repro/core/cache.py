@@ -166,6 +166,12 @@ class CappedCache:
         # Residency listeners (the peer-cache registry's copy counter).
         self._on_insert: Optional[Callable[[int], None]] = None
         self._on_evict: Optional[Callable[[int], None]] = None
+        # Flight-recorder listeners (ISSUE 10): a second, dedicated slot.
+        # The residency slot above is contended (peer-cache registry, the
+        # vector engine's residency bitmask) and observation must never
+        # displace it.  Observe-only: fired after all state changes.
+        self._trace_insert: Optional[Callable[[int], None]] = None
+        self._trace_evict: Optional[Callable[[int], None]] = None
         self._lock = threading.RLock()
         # FIFO order: key -> payload (bytes) | None (spilled to disk).
         self._entries: "collections.OrderedDict[SampleKey, Optional[bytes]]" = (
@@ -203,6 +209,8 @@ class CappedCache:
         self.stats.evictions += 1
         if self._on_evict is not None:
             self._on_evict(victim.index)
+        if self._trace_evict is not None:
+            self._trace_evict(victim.index)
 
     def _over_capacity_locked(self) -> bool:
         if self.max_items is not None and len(self._entries) > self.max_items:
@@ -244,6 +252,8 @@ class CappedCache:
             self.stats.inserts += 1
             if self._on_insert is not None:
                 self._on_insert(index)
+            if self._trace_insert is not None:
+                self._trace_insert(index)
             while self._over_capacity_locked():
                 self._evict_one_locked()
             self._maybe_spill_locked()
@@ -343,6 +353,24 @@ class CappedCache:
         with self._lock:
             self._on_insert = on_insert
             self._on_evict = on_evict
+
+    def set_trace_listener(
+        self,
+        on_insert: Optional[Callable[[int], None]],
+        on_evict: Optional[Callable[[int], None]],
+    ) -> None:
+        """Install the flight recorder's insert/evict observers (ISSUE 10).
+
+        A dedicated slot so tracing composes with — never displaces — the
+        residency listener.  Installed by the *host* projection wiring
+        (``repro.core.simulator`` / ``repro.pipeline.spec``), pointed at a
+        ``repro.obs.events.CacheTracer``; rule PL006 keeps ``repro.obs``
+        itself from mutating cache state.  Fired under the cache lock,
+        after all state changes; callbacks must not call back into this
+        cache."""
+        with self._lock:
+            self._trace_insert = on_insert
+            self._trace_evict = on_evict
 
     def peek(self, index: int) -> Optional[bytes]:
         """Read a payload WITHOUT touching stats (or FIFO state).

@@ -31,6 +31,7 @@ from repro.core.prefetcher import PrefetchService
 from repro.core.sampler import Sampler
 from repro.core.types import EpochStats
 from repro.engine.kernels import DemandKernel
+from repro.obs.events import TraceRecorder, trace_demand, trace_emit, trace_sync
 
 #: Internal marker yielded by ``_sample_steps`` for a sub-step phase (a
 #: time component that is its own scheduler event, not a finished sample).
@@ -64,6 +65,7 @@ class DeliLoader:
         drop_last: bool = True,
         planner_factory: Optional[Callable[[Sequence[int]], object]] = None,
         oracle_view=None,
+        trace: Optional[TraceRecorder] = None,
     ):
         """``planner_factory`` overrides the knob-driven ``PrefetchPlanner``
         with a custom epoch-order -> planner construction — the oracle data
@@ -86,6 +88,9 @@ class DeliLoader:
         self.oracle_view = oracle_view
         self.clock = clock or RealClock()
         self.node = node
+        # Flight recorder (ISSUE 10): observe-only; ``None`` makes every
+        # emit a no-op and the schedule byte-identical to an untraced run.
+        self._trace = trace
         self.drop_last = drop_last
         self.epoch_history: List[EpochStats] = []
         self._epoch = 0
@@ -202,6 +207,11 @@ class DeliLoader:
                 owned, in_flight=getattr(planner, "in_flight", None)
             )
         # parity-mirror: placement-install end
+        if self.service is not None:
+            # Flight recorder: stamp the epoch's policy family on the shared
+            # service so every issue event carries its provenance (the
+            # simulator's begin_epoch stamps the identical line).
+            self.service.provenance = getattr(planner, "provenance", "paper")
         consumed = 0
         in_batch = skip % self.batch_size
         self._active_stats = stats
@@ -240,6 +250,15 @@ class DeliLoader:
                 stats.samples += 1
                 stats.record(result.tier)
                 stats.data_wait_seconds += dt
+                trace_demand(
+                    self._trace,
+                    self.node,
+                    t0,
+                    dt,
+                    idx,
+                    result.tier,
+                    result.class_b,
+                )
             in_batch += 1
             batch_end = False
             if in_batch == self.batch_size:
@@ -249,8 +268,12 @@ class DeliLoader:
                     for _ in overlap.run(stats):
                         yield _PHASE  # one bucket span = one scheduler event
                 elif compute_per_batch_s:
+                    c0 = self.clock.now()
                     self.clock.sleep(compute_per_batch_s)
                     stats.compute_seconds += compute_per_batch_s
+                    trace_emit(
+                        self._trace, "compute", self.node, c0, compute_per_batch_s
+                    )
             yield idx, result, dt, consumed, batch_end
 
     def _finish_epoch(self, stats: EpochStats, evictions_before: int) -> None:
@@ -325,7 +348,7 @@ class DeliLoader:
         duration ``comm_s`` — the exact float operations
         ``NodeSimulator.sync_to`` performs, in the same order
         (``clock.sleep`` is the same ``+=`` the simulator applies)."""
-        # parity-mirror: sync-to begin clock=self.clock stats=self._active_stats
+        # parity-mirror: sync-to begin clock=self.clock stats=self._active_stats node=self.node trace=self._trace
         wait = t - self.clock.now()
         if wait > 0:
             if self._active_stats is not None:
@@ -335,6 +358,7 @@ class DeliLoader:
             if self._active_stats is not None:
                 self._active_stats.allreduce_comm_seconds += comm_s
             self.clock.sleep(comm_s)
+        trace_sync(self._trace, self.node, self.clock.now(), wait, comm_s)
         # parity-mirror: sync-to end
 
     def __len__(self) -> int:

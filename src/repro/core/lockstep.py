@@ -55,6 +55,7 @@ from repro.core.cache import CappedCache
 from repro.core.clock import Clock
 from repro.core.types import EpochStats, StoreStats
 from repro.engine.kernels import DemandKernel
+from repro.obs.events import CLUSTER_NODE, TraceRecorder, trace_demand, trace_emit
 
 if TYPE_CHECKING:  # deferred for the same reason as in core.simulator:
     # repro.distributed imports repro.core back.
@@ -84,6 +85,7 @@ def drive_interleaved_epoch(
     batch_barrier: Optional[Callable[[float, Tuple[int, ...]], None]] = None,
     backup_workers: int = 0,
     staleness_bound: int = 0,
+    trace: Optional[TraceRecorder] = None,
 ) -> None:
     """THE event-interleaved cluster schedule for one epoch — a single
     implementation shared verbatim by the simulator and the lock-step
@@ -132,6 +134,11 @@ def drive_interleaved_epoch(
 
     With ``sync="epoch"`` (default) the schedule is the PR 3 schedule,
     event for event.
+
+    ``trace`` (ISSUE 10) is the optional flight recorder: the driver emits
+    ``park`` / ``release`` / ``epoch-barrier`` events from this one shared
+    loop, so barrier provenance is parity-free by construction.  With
+    ``trace=None`` the schedule is byte-identical to an untraced run.
     """
     if sync not in ("epoch", "batch"):
         raise ValueError(f"unknown sync {sync!r}; expected 'epoch' or 'batch'")
@@ -155,6 +162,13 @@ def drive_interleaved_epoch(
         ):
             # Enough running nodes reached a batch boundary: allreduce.
             t_bar = max(now(rank) for rank in parked)
+            trace_emit(
+                trace, "release", CLUSTER_NODE, t_bar,
+                # Sorted: the parked *set* is schedule-determined, but its
+                # arrival order is an engine detail (the vector engine
+                # reaches equal-time boundaries in a different step order).
+                round=barrier_round, ranks=tuple(sorted(parked)),
+            )
             # Rounds finishing during the wait become visible — but never
             # fold past a straggler's own next event (fold safety).
             fold_all(t_bar if not heap else min(t_bar, heap[0][0]))
@@ -175,13 +189,19 @@ def drive_interleaved_epoch(
             done_batches[rank] += 1
             if done_batches[rank] > barrier_round + staleness_bound:
                 parked.append(rank)
+                trace_emit(
+                    trace, "park", rank, now(rank),
+                    batch=done_batches[rank], round=barrier_round,
+                )
             else:
                 # Behind (a dropped straggler) or within the staleness
                 # window: skip this barrier and keep running.
                 heapq.heappush(heap, (now(rank), rank))
         else:
             heapq.heappush(heap, (now(rank), rank))
-    barrier(max(now(rank) for rank in range(n_nodes)))
+    t_end = max(now(rank) for rank in range(n_nodes))
+    trace_emit(trace, "epoch-barrier", CLUSTER_NODE, t_end)
+    barrier(t_end)
 
 
 def peer_probe_payload(
@@ -251,34 +271,51 @@ class SubstepAccess:
     insert: Callable[[int, bytes], None]  # demand-path cache insert
     kernel: "DemandKernel"  # precomputed per-sample charge components
     insert_on_miss: bool
+    node: int = 0  # rank the flight recorder attributes events to
+    trace: Optional[TraceRecorder] = None
 
     def run(self, idx: int, stats: EpochStats) -> Iterator[int]:
         t0 = self.now()
         self.fold_own()
         payload = self.local_lookup(idx)
+        components: List[Tuple[str, float]] = []
+        class_b = 0
         if payload is not None:
             self.charge(self.kernel.ram_hit_s)
             stats.record("ram")
+            tier = "ram"
+            components.append(("local", self.kernel.ram_hit_s))
         else:
             if self.peer_lookup is not None:
                 self.charge(self.kernel.probe_rtt_s)  # probe in flight
+                components.append(("probe", self.kernel.probe_rtt_s))
                 yield STEP_CONTINUE
                 self.fold_own()
                 payload = self.peer_lookup(idx)
             if payload is not None:
                 self.charge(self.kernel.peer_stream_s)
                 stats.record("peer")
+                tier = "peer"
+                components.append(("peer", self.kernel.peer_stream_s))
             else:
                 payload = self.bucket_read(idx)
                 self.charge(self.kernel.bucket_get_s)
                 stats.record("bucket")
+                tier = "bucket"
+                class_b = 1
+                components.append(("bucket", self.kernel.bucket_get_s))
             yield STEP_CONTINUE  # transfer in flight; rounds land inside it
             self.fold_own()
             if self.insert_on_miss:
                 self.insert(idx, payload)
         self.charge(self.kernel.cpu_overhead_s)
+        components.append(("cpu", self.kernel.cpu_overhead_s))
         stats.samples += 1
-        stats.data_wait_seconds += self.now() - t0
+        dt = self.now() - t0
+        stats.data_wait_seconds += dt
+        trace_demand(
+            self.trace, self.node, t0, dt, idx, tier, class_b, tuple(components)
+        )
 
 
 @dataclasses.dataclass
@@ -316,21 +353,33 @@ class BucketedBatchComm:
     compute_span_s: float  # per-bucket backprop span (compute/n_buckets)
     bucket_comm_s: float  # per-bucket allreduce duration (comm/n_buckets)
     n_buckets: int
+    node: int = 0  # rank the flight recorder attributes events to
+    trace: Optional[TraceRecorder] = None
 
     def run(self, stats: EpochStats) -> Iterator[int]:
         finish = self.now()  # when the comm channel frees up
         for b in range(self.n_buckets):
+            c0 = self.now()
             self.charge(self.compute_span_s)
             stats.compute_seconds += self.compute_span_s
+            trace_emit(
+                self.trace, "compute", self.node, c0, self.compute_span_s, bucket=b
+            )
             ready = self.now()
             start = ready if ready > finish else finish
             finish = start + self.bucket_comm_s
+            trace_emit(
+                self.trace, "overlap-bucket", self.node, start,
+                self.bucket_comm_s, bucket=b,
+            )
             if b + 1 < self.n_buckets:
                 yield STEP_CONTINUE
         exposed = finish - self.now()
         if exposed > 0:
+            e0 = self.now()
             self.charge(exposed)
             stats.allreduce_comm_seconds += exposed
+            trace_emit(self.trace, "overlap-exposed", self.node, e0, exposed)
 
 
 class LockstepPrefetchService:
@@ -377,6 +426,7 @@ class LockstepPrefetchService:
         clock: Optional[Clock] = None,
         registry: Optional["PeerCacheRegistry"] = None,
         node_id: int = 0,
+        trace: Optional[TraceRecorder] = None,
     ):
         self.cache = cache
         self.sample_bytes = sample_bytes
@@ -391,6 +441,12 @@ class LockstepPrefetchService:
         self.clock = clock
         self.registry = registry
         self.node_id = node_id
+        self.trace = trace
+        # Flight-recorder provenance for issued rounds: the epoch drivers
+        # stamp the installed planner's policy family here ("paper" /
+        # "oracle" / "cluster-oracle") at epoch begin.  Observe-only — the
+        # partition itself never reads it.
+        self.provenance = "paper"
         # Event state: the single worker's availability + pending insert
         # events, each ``(completion_time, [(key, payload), ...])``.
         self.free_at = 0.0
@@ -459,6 +515,7 @@ class LockstepPrefetchService:
             keys = [k for k in keys if not self.cache.contains(k)]
             if not keys:
                 return now
+        n_retry = 0
         if self._deferred:
             # Placement: keys deferred at earlier rounds (owner fetch in
             # flight then) retry ahead of this round's keys — their
@@ -466,14 +523,15 @@ class LockstepPrefetchService:
             # demand probe already pulled them.
             retry = [k for k in self._deferred if not self.cache.contains(k)]
             self._deferred = []
+            n_retry = len(retry)
             keys = retry + keys
         start = max(now, self.free_at)
         listing_s = 0.0
+        class_a = 0
         if self.list_every_fetch or self.rounds == 0:
             listing_s = self.bucket.list_seconds(self.n_samples)
-            self.store_stats.class_a_requests += max(
-                1, -(-self.n_samples // self.bucket.page_size)
-            )
+            class_a = max(1, -(-self.n_samples // self.bucket.page_size))
+            self.store_stats.class_a_requests += class_a
         # Peer tier: keys a peer already holds travel the inter-node network
         # (sequential RPCs) instead of costing bucket GETs; failed probes pay
         # the lookup RTT — the same charges as the demand path.  Under
@@ -491,13 +549,19 @@ class LockstepPrefetchService:
         bucket_keys = keys
         fetch_keys = keys  # the keys this round actually delivers
         peer_s = 0.0
+        n_peer = 0
+        n_deferred = 0
+        dup_keys: List[int] = []
         if self.registry is not None:
             bucket_keys = []
             fetch_keys = []
-            n_peer = 0
-            n_deferred = 0
             for k in keys:
-                if self._peer_probe(k):
+                probe_hit = self._peer_probe(k)
+                trace_emit(
+                    self.trace, "probe", self.node_id, now,
+                    idx=k, hit=int(probe_hit),
+                )
+                if probe_hit:
                     n_peer += 1
                     fetch_keys.append(k)
                 elif self._owned is None or k in self._owned:
@@ -511,6 +575,7 @@ class LockstepPrefetchService:
                     # (bulk) GET beats a guaranteed serial demand GET.
                     bucket_keys.append(k)
                     fetch_keys.append(k)
+                    dup_keys.append(k)
             self.placement_deferrals += n_deferred
             if self._in_flight is not None:
                 self._in_flight.update(bucket_keys)
@@ -534,6 +599,15 @@ class LockstepPrefetchService:
         self.store_stats.class_b_requests += len(bucket_keys)
         self.store_stats.bytes_read += len(bucket_keys) * self.sample_bytes
         self.store_stats.read_seconds += dur
+        trace_emit(
+            self.trace, "issue", self.node_id, start, dur,
+            round=self.rounds, provenance=self.provenance, done=done,
+            n_keys=len(keys), n_retry=n_retry, n_peer=n_peer,
+            n_bucket=len(bucket_keys) - len(dup_keys), n_dup=len(dup_keys),
+            n_deferred=n_deferred, dup=tuple(dup_keys),
+            keys=tuple(bucket_keys),
+            class_a=class_a, class_b=len(bucket_keys),
+        )
         items = [(k, self._payload(k)) for k in fetch_keys]
         if self.streaming_insert:
             # Spread inserts uniformly across the round duration (insert
@@ -562,10 +636,21 @@ class LockstepPrefetchService:
         remaining: List[Tuple[float, List[Tuple[int, bytes]]]] = []
         for done, items in self.pending:
             if done <= now:
+                # Cache-insert events pin to the round's completion time:
+                # the fold may be driven by another node's clock (fold_all),
+                # which must never leak into this node's timestamps.
+                if self.trace is not None:
+                    self.trace.pin(done)
                 for k, payload in items:
                     self.cache.put(k, payload)
                     if self._in_flight is not None:
                         self._in_flight.discard(k)
+                if self.trace is not None:
+                    self.trace.unpin()
+                    self.trace.emit(
+                        "advance", self.node_id, done,
+                        n=len(items), keys=tuple(k for k, _ in items),
+                    )
                 inserted += len(items)
             else:
                 remaining.append((done, items))

@@ -72,6 +72,12 @@ class PrefetchPlanner:
       * round sizes are ``fetch_size`` except possibly the last.
     """
 
+    #: Flight-recorder provenance (ISSUE 10): the policy family stamped on
+    #: every ``issue`` event this planner's rounds produce.  The paper's
+    #: knob-driven heuristics (50/50, full-fetch, threshold sweeps) all
+    #: plan here.
+    provenance = "paper"
+
     def __init__(self, order: Sequence[int], config: PrefetchConfig):
         self.order = list(order)
         self.config = config

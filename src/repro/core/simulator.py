@@ -76,6 +76,13 @@ from repro.core.sampler import DistributedPartitionSampler, LocalityAwareSampler
 from repro.core.types import EpochStats, StoreStats, sequential_sum
 from repro.core.workloads import WorkloadSpec
 from repro.engine.kernels import DemandKernel
+from repro.obs.events import (
+    CacheTracer,
+    TraceRecorder,
+    trace_demand,
+    trace_emit,
+    trace_sync,
+)
 
 if TYPE_CHECKING:  # runtime import is deferred: repro.core is imported by
     # repro.distributed.peer_cache, so a module-level import here would be
@@ -156,6 +163,11 @@ class SimConfig:
     # epochs whose exactness it cannot batch (peer registry attached, or
     # the legacy sequential schedule).
     engine: str = "scalar"  # "scalar" | "vector"
+    # Flight recorder (ISSUE 10): a shared TraceRecorder observing the run.
+    # Observe-only — ``None`` (the default) must leave every stat, schedule
+    # and parity fingerprint byte-identical to an untraced run — and
+    # excluded from ``label()``: tracing is not an experimental condition.
+    trace: Optional[TraceRecorder] = None
 
     def __post_init__(self) -> None:
         if self.sync not in ("epoch", "batch"):
@@ -289,6 +301,11 @@ class NodeSimulator:
     ):
         self.spec = spec
         self.cfg = cfg
+        self.node_id = node_id
+        # Flight recorder (ISSUE 10): observe-only; ``None`` makes every
+        # emit a no-op and the schedule byte-identical to an untraced run.
+        self._trace = cfg.trace
+        self._cache_tracer: Optional[CacheTracer] = None
         # Straggler-aware: this node's calibrated models are rebuilt through
         # its profile (the default 1.0 multipliers are bitwise no-ops, so
         # homogeneous clusters keep their exact historical timelines).  The
@@ -321,6 +338,8 @@ class NodeSimulator:
                         self.network, spec.n_nodes
                     ),
                     n_buckets=cfg.collective.n_buckets,
+                    node=self.node_id,
+                    trace=self._trace,
                 )
                 # parity-mirror: overlap-build end
         # THE per-sample cost arithmetic (repro.engine.kernels), shared by
@@ -334,7 +353,6 @@ class NodeSimulator:
             pipeline=self.pipeline,
             sample_bytes=spec.sample_bytes,
         )
-        self.node_id = node_id
         self.t = 0.0
         # Oracle data plane (ISSUE 5): the clairvoyant planner replaces the
         # knob-driven one, and/or Belady replaces FIFO eviction.  Both hang
@@ -378,6 +396,19 @@ class NodeSimulator:
 
                 self._belady = BeladyEviction()
             self.cache = CappedCache(max_items=max_items, eviction_policy=self._belady)
+            if self._trace is not None:
+                # Dedicated trace-listener slot: inserts/evictions recorded
+                # at this node's clock (or the pinned round-completion time
+                # during pre-fetch folds).
+                self._cache_tracer = CacheTracer(
+                    self._trace,
+                    node_id,
+                    now=lambda: self.t,
+                    policy=self.cache.eviction_policy.name,
+                )
+                self.cache.set_trace_listener(
+                    self._cache_tracer.on_insert, self._cache_tracer.on_evict
+                )
             self.service = LockstepPrefetchService(
                 self.cache,
                 sample_bytes=spec.sample_bytes,
@@ -389,6 +420,7 @@ class NodeSimulator:
                 list_every_fetch=cfg.list_every_fetch,
                 streaming_insert=cfg.streaming_insert,
                 node_id=node_id,
+                trace=self._trace,
             )
         # Cooperative peer-cache tier (set by simulate_cluster / tests).
         self.registry: Optional["PeerCacheRegistry"] = None
@@ -440,6 +472,8 @@ class NodeSimulator:
             insert=self.cache.put,
             kernel=self.kernel,
             insert_on_miss=self._insert_on_miss,
+            node=self.node_id,
+            trace=self._trace,
         )
         # parity-mirror: substep-build end
 
@@ -547,7 +581,17 @@ class NodeSimulator:
             self.cache.put(idx, _SENTINEL)
         self.t += self.kernel.cpu_overhead_s
         stats.samples += 1
-        stats.data_wait_seconds += self.t - t0
+        dt = self.t - t0
+        stats.data_wait_seconds += dt
+        trace_demand(
+            self._trace,
+            self.node_id,
+            t0,
+            dt,
+            idx,
+            tier,
+            1 if tier == "bucket" else 0,
+        )
 
     # -- epoch stepper -------------------------------------------------------
     def begin_epoch(self, epoch: int, order: Sequence[int], node: int = 0) -> None:
@@ -595,6 +639,11 @@ class NodeSimulator:
                 owned, in_flight=getattr(self._planner, "in_flight", None)
             )
         # parity-mirror: placement-install end
+        if self.service is not None:
+            # Flight recorder: stamp the epoch's policy family on the shared
+            # service so every issue event carries its provenance (the
+            # loader's _sample_steps stamps the identical line).
+            self.service.provenance = getattr(self._planner, "provenance", "paper")
         self._planner_iter = iter(self._planner)
         self._samples_in_batch = 0
         self._events = self._epoch_events(self._build_substep())
@@ -633,8 +682,20 @@ class NodeSimulator:
                     # (same code the lock-step loader runs).
                     yield from self._overlap.run(stats)
                 else:
+                    c0 = self.t
                     self.t += self.compute_per_batch_s
                     stats.compute_seconds += self.compute_per_batch_s
+                    if self.compute_per_batch_s:
+                        # Guarded like the loader's ``elif compute_per_batch_s``
+                        # branch: zero-compute specs emit no compute spans on
+                        # either projection.
+                        trace_emit(
+                            self._trace,
+                            "compute",
+                            self.node_id,
+                            c0,
+                            self.compute_per_batch_s,
+                        )
                 yield STEP_BATCH_END
             else:
                 yield STEP_CONTINUE
@@ -654,7 +715,7 @@ class NodeSimulator:
         leaves the barrier together at ``t + comm_s``.  Called by the
         cluster scheduler for every parked node under ``sync="batch"``,
         and (wait-only) for the epoch barrier of that schedule."""
-        # parity-mirror: sync-to begin clock=self.t stats=self._stats
+        # parity-mirror: sync-to begin clock=self.t stats=self._stats node=self.node_id trace=self._trace
         wait = t - self.t
         if wait > 0:
             if self._stats is not None:
@@ -664,6 +725,7 @@ class NodeSimulator:
             if self._stats is not None:
                 self._stats.allreduce_comm_seconds += comm_s
             self.t += comm_s
+        trace_sync(self._trace, self.node_id, self.t, wait, comm_s)
         # parity-mirror: sync-to end
 
     def finish_epoch(self) -> EpochStats:
@@ -878,6 +940,7 @@ def simulate_cluster(
                 batch_barrier=_batch_barrier if cfg.sync == "batch" else None,
                 backup_workers=cfg.backup_workers,
                 staleness_bound=cfg.staleness_bound,
+                trace=cfg.trace,
             )
         else:
             for node in nodes:

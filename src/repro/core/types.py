@@ -150,18 +150,45 @@ class EpochStats:
         return self.tier_hits.get("bucket", 0)
 
     @property
-    def wall_clock_seconds(self) -> float:
+    def wall_seconds(self) -> float:
         """The node's busy+blocked time inside the epoch: data-wait +
         compute + allreduce waits + allreduce transfer.  Under
         ``sync="batch"`` this is the node's barrier-to-barrier epoch
         duration (fig11's metric).  With zero collective cost the comm
-        term is 0.0 and this reproduces the pre-ISSUE-8 total exactly."""
+        term is 0.0 and this reproduces the pre-ISSUE-8 total exactly.
+        This is also exactly the per-rank row of the flight recorder's
+        wall-time decomposition (``repro.obs.export.decomposition``):
+        each traced span's duration is the very float added to the
+        matching field, so the table sums back to this property with
+        ``==``."""
         return (
             self.data_wait_seconds
             + self.compute_seconds
             + self.allreduce_wait_seconds
             + self.allreduce_comm_seconds
         )
+
+    @property
+    def wall_clock_seconds(self) -> float:
+        """Legacy alias of :attr:`wall_seconds` (seed-era consumers)."""
+        return self.wall_seconds
+
+    def asdict(self) -> Dict[str, object]:
+        """A stable plain-dict form: exactly the constructor fields, so
+        ``EpochStats(**s.asdict()) == s`` round-trips (``tier_hits`` is
+        copied, not aliased).  Derived properties are deliberately
+        excluded — serialize facts, recompute views."""
+        return {
+            "epoch": self.epoch,
+            "node": self.node,
+            "samples": self.samples,
+            "data_wait_seconds": self.data_wait_seconds,
+            "compute_seconds": self.compute_seconds,
+            "allreduce_wait_seconds": self.allreduce_wait_seconds,
+            "allreduce_comm_seconds": self.allreduce_comm_seconds,
+            "evictions": self.evictions,
+            "tier_hits": dict(self.tier_hits),
+        }
 
     @property
     def miss_rate(self) -> float:

@@ -149,6 +149,64 @@ class VectorNodeEngine(NodeSimulator):
         self._samples_in_batch = (pos + m_c) % batch
         return pos + m_c
 
+    def _trace_span(
+        self,
+        order: List[int],
+        pos: int,
+        chain: np.ndarray,
+        slots: np.ndarray,
+        m_c: int,
+        hits: "np.ndarray | None" = None,
+        tier: str = "",
+    ) -> None:
+        """Synthesize the scalar engine's per-sample trace events for the
+        committed prefix of one span, straight from the committed chain:
+        sample ``j`` starts at ``chain[slots[j]]``, ends (post-CPU) at
+        ``chain[slots[j] + 2]``, and a gradient boundary it completes
+        charges its compute span from that end — the identical floats the
+        scalar ``_access``/``_epoch_events`` pair records, so trace parity
+        holds across ``engine="scalar"|"vector"`` (ISSUE 10)."""
+        trace = self._trace
+        if trace is None or m_c == 0:
+            return
+        batch = self.spec.batch_size
+        # Sub-step granularity decorates each demand event with its ordered
+        # component decomposition.  In the vectorizable domain (no peer
+        # registry — begin_epoch falls back otherwise) SubstepAccess charges
+        # exactly tier-then-cpu per sample, so the components are a pure
+        # function of the hit/miss outcome; the cache-less schedules
+        # (_build_substep returns None for them) keep undecorated events.
+        substep = (
+            self.cfg.granularity == "substep"
+            and self.cfg.source != "disk"
+            and self.cache is not None
+        )
+        for j in range(m_c):
+            t0 = float(chain[slots[j]])
+            dur = float(chain[slots[j] + 2] - chain[slots[j]])
+            tier_j = tier if hits is None else ("ram" if hits[j] else "bucket")
+            attrs = dict(
+                idx=int(order[pos + j]),
+                tier=tier_j,
+                class_b=1 if tier_j == "bucket" else 0,
+            )
+            if substep:
+                attrs["components"] = (
+                    (("local", self.kernel.ram_hit_s),
+                     ("cpu", self.kernel.cpu_overhead_s))
+                    if tier_j == "ram"
+                    else (("bucket", self.kernel.bucket_get_s),
+                          ("cpu", self.kernel.cpu_overhead_s))
+                )
+            trace.emit("demand", self.node_id, t0, dur, **attrs)
+            if self.compute_per_batch_s and (pos + j + 1) % batch == 0:
+                trace.emit(
+                    "compute",
+                    self.node_id,
+                    float(chain[slots[j] + 2]),
+                    self.compute_per_batch_s,
+                )
+
     def _span_cut(self, pos: int, n: int) -> int:
         """A span's hard end: the next gradient boundary under the
         per-batch allreduce schedule (the engine must yield
@@ -206,6 +264,7 @@ class VectorNodeEngine(NodeSimulator):
             stats.record(tier, m)
             if tier == "bucket":
                 self.kernel.bill_demand_gets(self.store_stats, m)
+            self._trace_span(order, pos, chain, slots, m, tier=tier)
             pos = self._commit_span(pos, chain, slots, m)
             yield from self._boundary_signal(pos, n)
 
@@ -222,12 +281,19 @@ class VectorNodeEngine(NodeSimulator):
         assert cache is not None
         view = self.oracle_view
         get, put = cache.get, cache.put
+        # The cache walk runs *before* the span's time chain exists, so the
+        # tracer buffers insert/evict rows (capture mode) and flushes each
+        # sample's rows at its chain-derived insert time — the post-tier-
+        # charge instant where the scalar engine's ``put`` fires them.
+        tracer = self._cache_tracer
         n = len(order)
         pos = 0
         while pos < n:
             end = self._span_cut(pos, n)
             seg = order[pos:end]
             hits = np.empty(len(seg), dtype=bool)
+            marks: List[int] = []
+            buf = tracer.begin_capture() if tracer is not None else None
             for j, idx in enumerate(seg):
                 if view is not None:
                     # Cursor advances at access start (the scalar engine's
@@ -238,6 +304,8 @@ class VectorNodeEngine(NodeSimulator):
                 if not hit:
                     put(idx, SENTINEL)  # paper §IV-B: worker inserts on miss
                 hits[j] = hit
+                if buf is not None:
+                    marks.append(len(buf))
             n_ram = int(np.count_nonzero(hits))
             n_bucket = len(seg) - n_ram
             if n_ram:
@@ -249,6 +317,14 @@ class VectorNodeEngine(NodeSimulator):
                 pos,
                 np.where(hits, self.kernel.ram_hit_s, self.kernel.bucket_get_s),
             )
+            if tracer is not None:
+                ops = tracer.end_capture()
+                lo = 0
+                for j, hi in enumerate(marks):
+                    if hi > lo:
+                        tracer.flush(ops[lo:hi], float(chain[slots[j] + 1]))
+                    lo = hi
+            self._trace_span(order, pos, chain, slots, len(seg), hits=hits)
             pos = self._commit_span(pos, chain, slots, len(seg))
             yield from self._boundary_signal(pos, n)
 
@@ -334,6 +410,11 @@ class VectorNodeEngine(NodeSimulator):
                     stats.record("bucket", n_bucket)
                     cache.stats.misses += n_bucket
                     self.kernel.bill_demand_gets(self.store_stats, n_bucket)
+                # Demand inserts never happen here (the service owns cache
+                # population), so only demand/compute spans need synthesis;
+                # insert/evict/issue/advance events come from the shared
+                # service code this path already calls.
+                self._trace_span(order, pos, chain, slots, m_c, hits=hits)
                 pos = self._commit_span(pos, chain, slots, m_c)
                 yield from self._boundary_signal(pos, n)
         finally:

@@ -1,0 +1,64 @@
+"""``repro.obs`` — the virtual-time flight recorder (ISSUE 10).
+
+Event model and emit helpers live in :mod:`repro.obs.events`; the cost
+ledger (:mod:`repro.obs.ledger`) and exporters (:mod:`repro.obs.export`)
+are re-exported here too.  All of those are stdlib-only — this package
+``__init__`` is imported by ``repro.core.lockstep``, so it must stay free
+of any ``repro`` import outside ``obs`` to keep the dependency root
+cycle-free.  The one exception imports its home directly:
+
+* ``repro.obs.parity`` — ``assert_trace_parity`` / ``run_trace_parity``
+  (exact ``==`` on canonical event streams across both projections);
+  pulls in ``repro.pipeline``, so it is deliberately NOT re-exported.
+"""
+from repro.obs.events import (
+    CLUSTER_NODE,
+    CacheTracer,
+    TraceEvent,
+    TraceRecorder,
+    canonical_stream,
+    trace_demand,
+    trace_emit,
+    trace_sync,
+)
+from repro.obs.export import (
+    chrome_trace,
+    decomposition,
+    decomposition_table,
+    events_from_chrome,
+    load_chrome_trace,
+    text_timeline,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
+from repro.obs.ledger import (
+    LedgerLine,
+    LedgerReport,
+    assert_reconciles,
+    build_ledger,
+    reconcile,
+)
+
+__all__ = [
+    "CLUSTER_NODE",
+    "CacheTracer",
+    "LedgerLine",
+    "LedgerReport",
+    "TraceEvent",
+    "TraceRecorder",
+    "assert_reconciles",
+    "build_ledger",
+    "canonical_stream",
+    "chrome_trace",
+    "decomposition",
+    "decomposition_table",
+    "events_from_chrome",
+    "load_chrome_trace",
+    "reconcile",
+    "text_timeline",
+    "trace_demand",
+    "trace_emit",
+    "trace_sync",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,69 @@
+"""``python -m repro.obs`` — inspect an exported flight-recorder trace.
+
+Reads a Chrome trace-event JSON file written by
+``repro.obs.export.write_chrome_trace`` (e.g. via ``benchmarks/run.py
+--trace-dir``) and renders a text timeline plus the per-rank wall-time
+decomposition table; ``--validate`` runs the schema check instead and
+exits non-zero on problems.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs.export import (
+    decomposition_table,
+    events_from_chrome,
+    load_chrome_trace,
+    text_timeline,
+    validate_chrome_trace,
+)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Render or validate a flight-recorder Chrome trace.",
+    )
+    parser.add_argument("trace", help="path to a Chrome trace-event JSON file")
+    parser.add_argument(
+        "--limit", type=int, default=60, metavar="N",
+        help="timeline rows to print (0 = all; default %(default)s)",
+    )
+    parser.add_argument(
+        "--no-timeline", action="store_true",
+        help="print only the wall-time decomposition table",
+    )
+    parser.add_argument(
+        "--validate", action="store_true",
+        help="validate against the Chrome trace-event schema and exit",
+    )
+    args = parser.parse_args(argv)
+
+    doc = load_chrome_trace(args.trace)
+    if args.validate:
+        problems = validate_chrome_trace(doc)
+        if problems:
+            for p in problems:
+                print(p, file=sys.stderr)
+            return 1
+        n = sum(1 for r in doc["traceEvents"] if r.get("ph") != "M")
+        print(f"OK: {args.trace} valid Chrome trace ({n} events)")
+        return 0
+
+    events = events_from_chrome(doc)
+    print(f"{args.trace}: {len(events)} events")
+    print()
+    print("wall-time decomposition (virtual seconds):")
+    print(decomposition_table(events))
+    if not args.no_timeline:
+        limit = None if args.limit == 0 else args.limit
+        print()
+        shown = len(events) if limit is None else min(limit, len(events))
+        print(f"timeline (first {shown} of {len(events)} events):")
+        print(text_timeline(events, limit=limit))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,218 @@
+"""Exporters: Chrome trace-event JSON (Perfetto-loadable) and text views.
+
+``chrome_trace`` maps a recorded stream to the Chrome trace-event format
+(the ``{"traceEvents": [...]}`` object form): one *process* per rank
+(``pid = node + 1``; the cluster pseudo-node ``-1`` becomes pid 0) with
+fixed *thread* lanes per rank — data-wait, compute, allreduce, events —
+so a trace opens in Perfetto / ``chrome://tracing`` with wait vs comm vs
+compute visually separated per rank.  Virtual seconds map to microsecond
+``ts``/``dur``; the exact float seconds also ride along in ``args`` so
+:func:`events_from_chrome` can round-trip a file losslessly for the CLI.
+
+``validate_chrome_trace`` is the schema check CI runs on a generated
+trace: required keys per event, ``X`` events carry ``dur``, and ``ts`` is
+monotone non-decreasing within every ``(pid, tid)`` track.
+
+Stdlib-only (``json``); imports nothing from ``repro`` outside ``obs``.
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.obs.events import TraceEvent
+
+#: Fixed per-rank lanes (Chrome ``tid``).  Order is display order.
+LANES: Tuple[Tuple[int, str], ...] = (
+    (1, "data-wait"),
+    (2, "compute"),
+    (3, "allreduce"),
+    (4, "events"),
+)
+
+#: Kinds rendered as duration spans (Chrome ``ph: "X"``); everything else
+#: is an instant (``ph: "i"``, thread scope).
+SPAN_KINDS = frozenset(
+    ("demand", "compute", "allreduce-wait", "allreduce-comm",
+     "overlap-bucket", "overlap-exposed")
+)
+
+_US = 1e6  # virtual seconds -> trace-event microseconds
+
+
+def lane_of(kind: str) -> int:
+    if kind == "demand":
+        return 1
+    if kind == "compute":
+        return 2
+    if kind.startswith("allreduce") or kind.startswith("overlap"):
+        return 3
+    return 4
+
+
+def _jsonable(value: Any) -> Any:
+    if isinstance(value, tuple):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+def chrome_trace(events: Iterable[TraceEvent]) -> Dict[str, Any]:
+    """Render a stream as a Chrome trace-event JSON object."""
+    rows: List[Dict[str, Any]] = []
+    pids = sorted({e.node + 1 for e in events})
+    for pid in pids:
+        name = "cluster" if pid == 0 else f"rank {pid - 1}"
+        rows.append({"name": "process_name", "ph": "M", "ts": 0, "pid": pid,
+                     "tid": 0, "args": {"name": name}})
+        rows.append({"name": "process_sort_index", "ph": "M", "ts": 0, "pid": pid,
+                     "tid": 0, "args": {"sort_index": pid}})
+        for tid, lane in LANES:
+            rows.append({"name": "thread_name", "ph": "M", "ts": 0, "pid": pid,
+                         "tid": tid, "args": {"name": lane}})
+            rows.append({"name": "thread_sort_index", "ph": "M", "ts": 0, "pid": pid,
+                         "tid": tid, "args": {"sort_index": tid}})
+    spans: List[Dict[str, Any]] = []
+    for e in events:
+        args: Dict[str, Any] = {k: _jsonable(v) for k, v in e.attrs}
+        args["vt"] = e.t       # exact virtual seconds (lossless round-trip)
+        args["vdur"] = e.dur
+        row: Dict[str, Any] = {
+            "name": e.kind,
+            "cat": e.kind,
+            "ts": e.t * _US,
+            "pid": e.node + 1,
+            "tid": lane_of(e.kind),
+            "args": args,
+        }
+        if e.kind in SPAN_KINDS:
+            row["ph"] = "X"
+            row["dur"] = e.dur * _US
+        else:
+            row["ph"] = "i"
+            row["s"] = "t"
+        spans.append(row)
+    spans.sort(key=lambda r: (r["pid"], r["tid"], r["ts"], r["name"]))
+    return {"traceEvents": rows + spans, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, events: Iterable[TraceEvent]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(chrome_trace(events), fh, indent=None, separators=(",", ":"))
+        fh.write("\n")
+
+
+def load_chrome_trace(path: str) -> Dict[str, Any]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def validate_chrome_trace(doc: Any) -> List[str]:
+    """Schema problems in a Chrome trace-event document (empty == valid)."""
+    problems: List[str] = []
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        return ["document is not an object with a traceEvents list"]
+    last_ts: Dict[Tuple[int, int], float] = {}
+    for i, row in enumerate(doc["traceEvents"]):
+        if not isinstance(row, dict):
+            problems.append(f"traceEvents[{i}]: not an object")
+            continue
+        missing = [k for k in ("name", "ph", "ts", "pid", "tid") if k not in row]
+        if missing:
+            problems.append(f"traceEvents[{i}]: missing {missing}")
+            continue
+        if row["ph"] == "M":
+            continue
+        if row["ph"] == "X" and "dur" not in row:
+            problems.append(f"traceEvents[{i}]: X event without dur")
+        track = (row["pid"], row["tid"])
+        ts = float(row["ts"])
+        if ts < last_ts.get(track, float("-inf")):
+            problems.append(
+                f"traceEvents[{i}]: ts {ts} not monotone on track {track}"
+            )
+        last_ts[track] = ts
+    return problems
+
+
+def _tupled(value: Any) -> Any:
+    if isinstance(value, list):
+        return tuple(_tupled(v) for v in value)
+    return value
+
+
+def events_from_chrome(doc: Dict[str, Any]) -> List[TraceEvent]:
+    """Reconstruct the event stream from an exported document (the exact
+    virtual times come from the ``vt``/``vdur`` args)."""
+    out: List[TraceEvent] = []
+    for row in doc.get("traceEvents", ()):
+        if row.get("ph") == "M":
+            continue
+        args = dict(row.get("args", {}))
+        t = float(args.pop("vt", row["ts"] / _US))
+        dur = float(args.pop("vdur", row.get("dur", 0.0) / _US))
+        attrs = tuple(sorted((k, _tupled(v)) for k, v in args.items()))
+        out.append(TraceEvent(row["name"], int(row["pid"]) - 1, t, dur, attrs))
+    return out
+
+
+# -- text rendering ----------------------------------------------------------
+def _fmt_node(node: int) -> str:
+    return "cluster" if node < 0 else f"rank{node}"
+
+
+def text_timeline(events: Iterable[TraceEvent], limit: Optional[int] = None) -> str:
+    """A plain-text event log in virtual-time order."""
+    ordered = sorted(events, key=lambda e: (e.t, e.node, e.kind, e.attrs))
+    if limit is not None:
+        ordered = ordered[:limit]
+    lines = []
+    for e in ordered:
+        attrs = " ".join(f"{k}={v}" for k, v in e.attrs if k != "keys")
+        dur = f" dur={e.dur:.6f}" if e.dur else ""
+        lines.append(f"t={e.t:>12.6f}  {_fmt_node(e.node):>8}  {e.kind:<15}{dur}"
+                     + (f"  {attrs}" if attrs else ""))
+    return "\n".join(lines)
+
+
+def decomposition(events: Iterable[TraceEvent]) -> Dict[int, Dict[str, float]]:
+    """Per-rank wall-time decomposition summed straight off the spans.
+
+    The four columns are exactly the four ``EpochStats`` time fields: each
+    span's ``dur`` is the float the instrumented code added to the
+    matching counter, so per rank ``data_wait + compute + allreduce_wait +
+    allreduce_comm`` reproduces ``EpochStats.wall_seconds`` (tests assert
+    this exactly).  Under ``overlap="buckets"`` the exposed comm tail is
+    charged by ``overlap-exposed`` events (``overlap-bucket`` spans are
+    the per-bucket transfers, hidden or not — informational), so those
+    count toward the comm column alongside ``allreduce-comm``.
+    """
+    acc: Dict[int, Dict[str, float]] = defaultdict(
+        lambda: {"data_wait": 0.0, "compute": 0.0,
+                 "allreduce_wait": 0.0, "allreduce_comm": 0.0}
+    )
+    for e in events:
+        if e.node < 0:
+            continue
+        if e.kind == "demand":
+            acc[e.node]["data_wait"] += e.dur
+        elif e.kind == "compute":
+            acc[e.node]["compute"] += e.dur
+        elif e.kind == "allreduce-wait":
+            acc[e.node]["allreduce_wait"] += e.dur
+        elif e.kind in ("allreduce-comm", "overlap-exposed"):
+            acc[e.node]["allreduce_comm"] += e.dur
+    return {node: dict(cols) for node, cols in sorted(acc.items())}
+
+
+def decomposition_table(events: Iterable[TraceEvent]) -> str:
+    """The CLI's wall-time decomposition table."""
+    cols = ("data_wait", "compute", "allreduce_wait", "allreduce_comm")
+    header = f"{'rank':>6} " + " ".join(f"{c:>15}" for c in cols) + f" {'wall':>15}"
+    lines = [header, "-" * len(header)]
+    for node, d in decomposition(events).items():
+        wall = sum(d[c] for c in cols)
+        lines.append(
+            f"{node:>6} " + " ".join(f"{d[c]:>15.6f}" for c in cols) + f" {wall:>15.6f}"
+        )
+    return "\n".join(lines)

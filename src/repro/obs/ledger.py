@@ -1,0 +1,115 @@
+"""Per-request cost ledger: every Class A/B charge has an emitting event.
+
+The store-level counters (``StoreStats.class_a_requests`` /
+``class_b_requests``) are the repo's headline cost metric, but they are
+aggregates — a total with no audit trail.  The flight recorder gives every
+charge a witness:
+
+* each ``issue`` event carries ``class_a`` (LIST-class round issue) and
+  ``class_b`` (GET-class billed fetches in that round, retries included);
+* each ``demand`` event carries ``class_b`` (1 iff the read went to the
+  bucket tier and was billed as a demand GET).
+
+:func:`build_ledger` rolls a trace into per-node ledger lines, and
+:func:`reconcile` asserts the sum-of-ledger equals the counters **exactly**
+(integer ``==``) — the ISSUE 10 invariant that no cost is ever charged
+without an event and no event ever claims a cost that was not charged.
+
+Stdlib-only; operates on any iterable of :class:`TraceEvent`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Iterable, List, Tuple
+
+from repro.obs.events import TraceEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerLine:
+    """One charge, attributed to the event that caused it."""
+
+    node: int
+    t: float
+    kind: str  # "issue" or "demand"
+    class_a: int
+    class_b: int
+
+
+def build_ledger(events: Iterable[TraceEvent]) -> List[LedgerLine]:
+    """Extract every cost-bearing event as a ledger line, in (node, t) order."""
+    lines: List[LedgerLine] = []
+    for ev in events:
+        if ev.kind not in ("issue", "demand"):
+            continue
+        attrs = dict(ev.attrs)
+        a = int(attrs.get("class_a", 0))
+        b = int(attrs.get("class_b", 0))
+        if a or b:
+            lines.append(LedgerLine(node=ev.node, t=ev.t, kind=ev.kind, class_a=a, class_b=b))
+    lines.sort(key=lambda ln: (ln.node, ln.t, ln.kind))
+    return lines
+
+
+def ledger_totals(events: Iterable[TraceEvent]) -> Tuple[int, int]:
+    """(class_a, class_b) summed over the whole trace."""
+    a = b = 0
+    for ln in build_ledger(events):
+        a += ln.class_a
+        b += ln.class_b
+    return a, b
+
+
+def per_node_totals(events: Iterable[TraceEvent]) -> Dict[int, Tuple[int, int]]:
+    """(class_a, class_b) per emitting node (cluster planner = node -1)."""
+    acc: Dict[int, List[int]] = defaultdict(lambda: [0, 0])
+    for ln in build_ledger(events):
+        acc[ln.node][0] += ln.class_a
+        acc[ln.node][1] += ln.class_b
+    return {node: (a, b) for node, (a, b) in sorted(acc.items())}
+
+
+@dataclasses.dataclass
+class LedgerReport:
+    """Ledger sums next to the store counters they must reproduce."""
+
+    ledger_class_a: int
+    ledger_class_b: int
+    store_class_a: int
+    store_class_b: int
+    n_lines: int
+
+    @property
+    def exact(self) -> bool:
+        return (
+            self.ledger_class_a == self.store_class_a
+            and self.ledger_class_b == self.store_class_b
+        )
+
+    def describe(self) -> str:
+        status = "RECONCILED" if self.exact else "MISMATCH"
+        return (
+            f"ledger[{self.n_lines} lines]: {status}\n"
+            f"  class_a ledger={self.ledger_class_a} store={self.store_class_a}\n"
+            f"  class_b ledger={self.ledger_class_b} store={self.store_class_b}"
+        )
+
+
+def reconcile(events: Iterable[TraceEvent], store_stats) -> LedgerReport:
+    """Compare the trace's summed charges with a run's ``StoreStats``."""
+    lines = build_ledger(events)
+    return LedgerReport(
+        ledger_class_a=sum(ln.class_a for ln in lines),
+        ledger_class_b=sum(ln.class_b for ln in lines),
+        store_class_a=int(store_stats.class_a_requests),
+        store_class_b=int(store_stats.class_b_requests),
+        n_lines=len(lines),
+    )
+
+
+def assert_reconciles(events: Iterable[TraceEvent], store_stats) -> LedgerReport:
+    """Assert sum-of-ledger == counters (exact integers); returns the report."""
+    report = reconcile(events, store_stats)
+    assert report.exact, report.describe()
+    return report

@@ -1,0 +1,92 @@
+"""Trace parity: the exact-``==`` discipline, extended to event streams.
+
+``pipeline.parity`` proves both projections of a ``DataPlaneSpec`` agree on
+*aggregate* accounting (tier hits, Class A/B, per-node-epoch waits).  This
+module proves the far stronger event-level property (ISSUE 10): run each
+projection with its own fresh :class:`repro.obs.events.TraceRecorder` and
+the two canonical event streams — every demand read, fetch round, probe,
+cache insert/eviction, compute span, barrier park/release — are equal with
+``==``, no tolerances, at identical virtual times with identical
+attributes.  The comparison is on :func:`repro.obs.events.canonical_stream`
+(the order-canonical multiset form), because *global* emission order is an
+engine detail while the events themselves are not.
+
+Import note: this module imports ``repro.pipeline.spec`` and therefore
+must not be imported from ``repro.obs.__init__`` (which ``repro.core``
+imports) — import it directly, as tests and the CLI do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.obs.events import TraceRecorder, canonical_stream
+
+
+@dataclasses.dataclass
+class TraceParityReport:
+    """Side-by-side canonical event streams of one spec's two projections.
+
+    ``exact`` is the property; ``describe()`` renders the first divergence
+    (and the one-sided remainders) for assertion messages.
+    """
+
+    spec_label: str
+    epochs: int
+    sim_stream: Tuple[tuple, ...]
+    runtime_stream: Tuple[tuple, ...]
+
+    @property
+    def exact(self) -> bool:
+        return self.sim_stream == self.runtime_stream
+
+    def first_divergence(self) -> Optional[Tuple[Optional[tuple], Optional[tuple]]]:
+        """The first canonical position where the streams differ (an event
+        pair, with ``None`` standing in past the shorter stream's end)."""
+        if self.exact:
+            return None
+        for a, b in zip(self.sim_stream, self.runtime_stream):
+            if a != b:
+                return (a, b)
+        if len(self.sim_stream) > len(self.runtime_stream):
+            return (self.sim_stream[len(self.runtime_stream)], None)
+        return (None, self.runtime_stream[len(self.sim_stream)])
+
+    def describe(self) -> str:
+        status = "EXACT" if self.exact else "DIVERGED"
+        lines = [
+            f"trace-parity[{self.spec_label}, {self.epochs} epochs]: {status}",
+            f"  events  sim={len(self.sim_stream)} runtime={len(self.runtime_stream)}",
+        ]
+        diff = self.first_divergence()
+        if diff is not None:
+            lines.append(f"  first divergence sim={diff[0]}")
+            lines.append(f"                   run={diff[1]}")
+        return "\n".join(lines)
+
+
+def run_trace_parity(spec, epochs: int = 2) -> TraceParityReport:
+    """Run both projections of ``spec`` under fresh recorders and compare.
+
+    The spec's own ``trace`` field is ignored (each projection gets its own
+    recorder via ``dataclasses.replace``), so a caller can hand in any
+    spec — traced or not — without aliasing one recorder across runs.
+    """
+    sim_rec, run_rec = TraceRecorder(), TraceRecorder()
+    dataclasses.replace(spec, trace=sim_rec).build_sim().run(epochs=epochs)
+    with dataclasses.replace(spec, trace=run_rec).build_runtime() as cluster:
+        cluster.run(epochs=epochs)
+    return TraceParityReport(
+        spec_label=spec.label(),
+        epochs=epochs,
+        sim_stream=canonical_stream(sim_rec.events),
+        runtime_stream=canonical_stream(run_rec.events),
+    )
+
+
+def assert_trace_parity(spec, epochs: int = 2) -> TraceParityReport:
+    """Assert event-level ``==`` across the two projections; returns the
+    report (whose streams callers can feed to the ledger or exporters)."""
+    report = run_trace_parity(spec, epochs=epochs)
+    assert report.exact, report.describe()
+    return report

@@ -61,6 +61,11 @@ class PlacementPrefetchPlanner(OraclePrefetchPlanner):
     and the only new behaviour is where each key's bytes come from.
     """
 
+    #: Flight-recorder provenance (ISSUE 10): ownership-partitioned rounds.
+    #: The per-key outcomes (owned / planned-duplicate / deferred / retry)
+    #: are stamped by the shared service partition itself.
+    provenance = "cluster-oracle"
+
     def __init__(
         self,
         order: Sequence[int],

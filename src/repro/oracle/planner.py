@@ -143,6 +143,9 @@ class OraclePrefetchPlanner:
     ``None`` (no listing, no worker time, no Class B).
     """
 
+    #: Flight-recorder provenance (ISSUE 10): per-rank clairvoyant rounds.
+    provenance = "oracle"
+
     def __init__(
         self,
         order: Sequence[int],

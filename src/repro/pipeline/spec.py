@@ -73,6 +73,7 @@ from repro.core.types import EpochStats, StoreStats
 from repro.core.workloads import WorkloadSpec
 from repro.distributed.peer_cache import PeerCacheRegistry, PeerStore
 from repro.engine.kernels import DemandKernel
+from repro.obs.events import CacheTracer, TraceRecorder
 from repro.oracle import (
     AccessOracle,
     BeladyEviction,
@@ -209,6 +210,13 @@ class DataPlaneSpec:
     # Runtime payload source; None = index-tagged synthetic bytes of the
     # workload's sample size.  (The simulator never materializes payloads.)
     payload_factory: Optional[Callable[["DataPlaneSpec"], Dict[int, bytes]]] = None
+    # Flight recorder (ISSUE 10): a TraceRecorder observing whichever
+    # projection is built from this spec.  Observe-only — ``None`` (the
+    # default) leaves every stat, schedule and parity fingerprint
+    # byte-identical — and excluded from ``label()``: tracing is not an
+    # experimental condition.  Lock-step only (virtual time); the
+    # free-running threaded runtime rejects it loudly.
+    trace: Optional[TraceRecorder] = None
 
     def __post_init__(self) -> None:
         if self.source not in ("bucket", "disk"):
@@ -287,6 +295,7 @@ class DataPlaneSpec:
             prefetch_policy=self.prefetch_policy,
             round_sizing=self.round_sizing,
             engine=self.engine,
+            trace=self.trace,
         )
 
     @classmethod
@@ -316,7 +325,7 @@ class DataPlaneSpec:
             round_sizing=cfg.round_sizing,
             engine=cfg.engine,
             seed=seed,
-            **overrides,
+            **{"trace": cfg.trace, **overrides},
         )
 
     def build_samplers(self) -> List:
@@ -451,6 +460,17 @@ class RuntimeCluster:
                 "free-running threaded runtime (explicit clock) cannot use "
                 "it — pass engine='scalar' or drop the clock"
             )
+        if not self.lockstep and spec.trace is not None:
+            # The flight recorder records *virtual* times; a free-running
+            # threaded cluster has only wall-clock races to offer, and a
+            # silently wall-clock trace would masquerade as comparable to
+            # the simulator's (docs/OBSERVABILITY.md).
+            raise ValueError(
+                "trace= needs the lock-step runtime (build_runtime() with "
+                "no clock); the free-running threaded mode has no virtual "
+                "timeline to record"
+            )
+        self.trace = spec.trace
         w = spec.workload
         # Per-node clocks: fresh VirtualClocks in lock-step mode, the one
         # shared clock in free-running mode.
@@ -534,6 +554,8 @@ class RuntimeCluster:
                             node_network, w.n_nodes
                         ),
                         n_buckets=spec.collective.n_buckets,
+                        node=rank,
+                        trace=self.trace,
                     )
                     # parity-mirror: overlap-build end
             self.allreduces.append(allreduce_s)
@@ -570,6 +592,18 @@ class RuntimeCluster:
                             else None
                         ),
                     )
+                    if self.trace is not None:
+                        # Dedicated trace-listener slot: inserts/evictions
+                        # recorded at this rank's clock (or the pinned
+                        # round-completion time during pre-fetch folds) —
+                        # the same wiring NodeSimulator.__init__ performs.
+                        tracer = CacheTracer(
+                            self.trace,
+                            rank,
+                            now=node_clock.now,
+                            policy=cache.eviction_policy.name,
+                        )
+                        cache.set_trace_listener(tracer.on_insert, tracer.on_evict)
                 store = bucket
                 if self.registry is not None:
                     assert cache is not None  # enforced by spec validation
@@ -601,6 +635,7 @@ class RuntimeCluster:
                             clock=node_clock,
                             registry=self.registry,
                             node_id=rank,
+                            trace=self.trace,
                         )
                     else:
                         service = PrefetchService(
@@ -653,6 +688,7 @@ class RuntimeCluster:
                 oracle_view=(
                     self.oracle.view(rank) if self.oracle is not None else None
                 ),
+                trace=self.trace,
             )
             self.caches.append(cache)
             self.services.append(service)
@@ -735,6 +771,8 @@ class RuntimeCluster:
                 sample_bytes=self.spec.workload.sample_bytes,
             ),
             insert_on_miss=insert_on_miss,
+            node=rank,
+            trace=self.trace,
         )
         # parity-mirror: substep-build end
 
@@ -830,6 +868,7 @@ class RuntimeCluster:
                     ),
                     backup_workers=self.spec.backup_workers,
                     staleness_bound=self.spec.staleness_bound,
+                    trace=self.trace,
                 )
             else:
                 for stepper in steppers:

@@ -286,6 +286,61 @@ def test_shared_state_allows_lockstep_home_and_wiring():
     assert run_rules_on_source("src/repro/oracle/view.py", wiring) == []
 
 
+# -- PL006 observer-purity ---------------------------------------------------
+def test_observer_purity_fires_on_mutators_in_obs_package():
+    src = (
+        "class Tracer:\n"
+        "    def on_insert(self, idx, payload):\n"
+        "        self.cache.put(idx, payload)\n"
+        "    def on_batch(self, stats, dt):\n"
+        "        stats.data_wait_seconds += dt\n"
+    )
+    findings = run_rules_on_source("src/repro/obs/broken.py", src)
+    assert [f.key for f in findings] == [".put", "augassign:data_wait_seconds"]
+    f = findings[0]
+    assert f.rule == "observer-purity" and f.code == "PL006"
+    assert f.symbol == "Tracer.on_insert"
+    assert "observe-only" in f.message and "emit events" in f.hint
+
+
+def test_observer_purity_allows_pure_observation():
+    src = (
+        "class Tracer:\n"
+        "    def on_insert(self, idx):\n"
+        "        self.trace.emit('insert', self.node, self.now(), idx=idx)\n"
+        "        self.count += 1\n"  # recorder-local counter, not a stats field
+    )
+    assert run_rules_on_source("src/repro/obs/fine.py", src) == []
+    # the same mutator call OUTSIDE obs/ is the host's business
+    host = "def fill(self, idx, p):\n    self.cache.put(idx, p)\n"
+    assert run_rules_on_source("src/repro/distributed/host.py", host) == []
+
+
+def test_observer_purity_fires_on_raw_emit_inside_mirror_region():
+    src = (
+        "def sync_to(self, t, comm_s=0.0):\n"
+        "    # parity-mirror: sync-to begin clock=self.t\n"
+        "    wait = t - self.t\n"
+        "    self._trace.emit('allreduce-wait', self.node_id, self.t, wait)\n"
+        "    trace_demand(self._trace, self.node_id, self.t, wait, 0, 'ram')\n"
+        "    trace_sync(self._trace, self.node_id, self.t, wait, comm_s)\n"
+        "    # parity-mirror: sync-to end\n"
+    )
+    findings = run_rules_on_source("src/repro/core/broken.py", src)
+    pl6 = [f for f in findings if f.rule == "observer-purity"]
+    assert sorted(f.key for f in pl6) == [".emit", "trace_demand"]
+    assert all(f.symbol == "sync-to" for f in pl6)
+    assert "trace_sync" in pl6[0].hint  # the sanctioned shared helper
+
+
+def test_observer_purity_allows_emits_outside_mirror_regions():
+    src = (
+        "def _access(self, idx):\n"
+        "    self._trace.emit('demand', self.node_id, self.t, 0.1, idx=idx)\n"
+    )
+    assert run_rules_on_source("src/repro/core/fine.py", src) == []
+
+
 # -- baseline mechanics ------------------------------------------------------
 def _finding(**kw):
     base = dict(
